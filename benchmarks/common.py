@@ -1,0 +1,85 @@
+"""Shared evaluation harness for the paper-scale benchmarks.
+
+Evaluates SplitEE / SplitEE-S / the four baselines on an (N, L) exit
+profile and aggregates to the paper's reporting units: accuracy (%) and
+cost in 1e4 * lambda, with deltas vs the final-exit row (Table 2 format).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CostModel, calibrate_alpha, confidence_cascade,
+                        deebert_cascade, final_exit, random_exit, run_many)
+from repro.data.profiles import PROFILE_DATASETS, simulate_exit_profiles
+
+L = 12
+NUM_RUNS = 20
+# large streams are subsampled for tractable CPU bench time (noted in
+# EXPERIMENTS.md; the bandit saturates within ~2k samples anyway)
+SUBSAMPLE = 120_000
+
+
+def load_profile(name: str, seed: int = 0):
+    spec = PROFILE_DATASETS[name]
+    prof = simulate_exit_profiles(spec, seed=seed, subsample=SUBSAMPLE)
+    return jnp.asarray(prof["conf"]), jnp.asarray(prof["correct"]), spec
+
+
+def calibrated_cost(conf, correct, *, offload: float, seed: int = 1):
+    """alpha from a held-out validation slice (labeled), as in the paper."""
+    n = conf.shape[0]
+    n_val = min(4096, n // 10)
+    cost = CostModel(num_layers=L, offload=offload)
+    alpha = calibrate_alpha(conf[:n_val], cost, correct[:n_val])
+    return dataclasses.replace(cost, alpha=alpha), n_val
+
+
+def eval_bandit(conf, correct, cost: CostModel, *, side_info: bool,
+                num_runs: int = NUM_RUNS, seed: int = 0) -> Dict[str, float]:
+    out = run_many(conf, jax.random.PRNGKey(seed), cost=cost,
+                   side_info=side_info, num_runs=num_runs)
+    perm = np.asarray(out["perm"])
+    arms = np.asarray(out["arm"])
+    exited = np.asarray(out["exited"])
+    corr = np.asarray(correct)[perm]                       # (R, N, L)
+    acc = np.where(exited,
+                   np.take_along_axis(corr, arms[..., None], 2)[..., 0],
+                   corr[..., -1])
+    return {
+        "acc": float(acc.mean()) * 100.0,
+        "cost": float(np.asarray(out["cost"]).sum(1).mean()),
+        "offload_frac": float(1.0 - exited.mean()),
+        "arms": arms,
+    }
+
+
+def eval_baselines(conf, correct, cost: CostModel, *, seed: int = 0):
+    res = {}
+    fa, fc = final_exit(conf, correct, cost)
+    res["final"] = {"acc": float(fa.mean()) * 100, "cost": float(fc.sum())}
+    accs, costs = [], []
+    for r in range(NUM_RUNS):
+        a, c = random_exit(conf, correct, cost,
+                           jax.random.PRNGKey(seed + r))
+        accs.append(float(a.mean()))
+        costs.append(float(c.sum()))
+    res["random"] = {"acc": float(np.mean(accs)) * 100,
+                     "cost": float(np.mean(costs))}
+    a, c = deebert_cascade(conf, correct, cost, jax.random.PRNGKey(seed))
+    res["deebert"] = {"acc": float(a.mean()) * 100, "cost": float(c.sum())}
+    a, c = confidence_cascade(conf, correct, cost)
+    res["elasticbert"] = {"acc": float(a.mean()) * 100,
+                          "cost": float(c.sum())}
+    return res
+
+
+def table_row(name: str, res: Dict[str, float], final: Dict[str, float]):
+    """Paper Table 2 format: delta accuracy (pts) and delta cost (%)."""
+    dacc = res["acc"] - final["acc"]
+    dcost = 100.0 * (res["cost"] - final["cost"]) / final["cost"]
+    return f"{name},{res['acc']:.1f},{dacc:+.1f},{res['cost']/1e4:.2f},{dcost:+.1f}%"

@@ -1,0 +1,74 @@
+"""Kernel micro-bench: CPU wall time of the public ops (ref backend —
+the Pallas path targets TPU and is validated in interpret mode by tests)
+plus the bandit-step itself (the paper's per-sample decision cost)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CostModel, bandit_step, init_state
+from repro.kernels.exit_confidence.ops import exit_confidence
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.wkv6.ops import wkv6
+
+
+def _time(fn, *args, iters=20, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(print_csv: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # fused exit confidence: (B=64, D=768) x vocab 30k (the per-exit cost)
+    h = jax.random.normal(key, (64, 768))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (768, 30522)) * 0.02
+    us = _time(exit_confidence, h, w, backend="ref")
+    gb = (h.size + w.size + 64) * 4 / 1e9
+    rows.append(f"kernel/exit_confidence/ref,{us:.1f},"
+                f"bytes={gb:.3f}GB,eff_GBps={gb / (us / 1e6):.1f}")
+
+    # attention prefill (B=1, H=8, S=1024, d=64), causal
+    q = jax.random.normal(key, (1, 8, 1024, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (1, 8, 1024, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (1, 8, 1024, 64))
+    us = _time(attention, q, k, v, causal=True, backend="ref")
+    fl = 4 * 8 * 1024 * 1024 * 64 / 2
+    rows.append(f"kernel/flash_attention/ref,{us:.1f},"
+                f"flops={fl:.2e},eff_GFLOPs={fl / (us / 1e6) / 1e9:.1f}")
+
+    # wkv6 (B=1, H=8, T=512, d=64)
+    r = jax.random.normal(key, (1, 8, 512, 64))
+    kk = jax.random.normal(jax.random.fold_in(key, 4), (1, 8, 512, 64))
+    vv = jax.random.normal(jax.random.fold_in(key, 5), (1, 8, 512, 64))
+    ww = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(key, 6),
+                                          (1, 8, 512, 64)))
+    u = jax.random.normal(jax.random.fold_in(key, 7), (8, 64))
+    us = _time(wkv6, r, kk, vv, ww, u, backend="ref", iters=5)
+    rows.append(f"kernel/wkv6/ref,{us:.1f},tokens_per_s={512 / (us / 1e6):.0f}")
+
+    # one bandit step (the paper's O(L) host-side decision)
+    cost = CostModel(num_layers=12)
+    state = init_state(12)
+    conf_row = jnp.asarray(np.random.default_rng(0).uniform(0, 1, 12))
+    us = _time(lambda s, c: bandit_step(s, c, cost=cost)[0], state,
+               conf_row, iters=200)
+    rows.append(f"kernel/bandit_step,{us:.1f},per_sample_decision")
+
+    if print_csv:
+        for row in rows:
+            print(row)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Paper Figs 3-6: accuracy and cost of SplitEE / SplitEE-S for offloading
+costs o in {1..5} * lambda on every dataset."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import calibrated_cost, eval_bandit, load_profile
+from repro.data.profiles import PROFILE_DATASETS
+
+OFFLOADS = [1.0, 2.0, 3.0, 4.0, 5.0]
+
+
+def run(print_csv: bool = True, datasets=None):
+    rows = []
+    for name in (datasets or PROFILE_DATASETS):
+        conf, correct, _ = load_profile(name)
+        for o in OFFLOADS:
+            t0 = time.time()
+            cost, _ = calibrated_cost(conf, correct, offload=o)
+            sp = eval_bandit(conf, correct, cost, side_info=False,
+                             num_runs=10)
+            sps = eval_bandit(conf, correct, cost, side_info=True,
+                              num_runs=10)
+            dt = (time.time() - t0) * 1e6 / conf.shape[0]
+            rows.append(
+                f"offload_sweep/{name}/o={o:.0f},{dt:.2f},"
+                f"splitee_acc={sp['acc']:.1f},splitee_cost={sp['cost']/1e4:.2f},"
+                f"splitee_s_acc={sps['acc']:.1f},"
+                f"splitee_s_cost={sps['cost']/1e4:.2f},"
+                f"alpha={cost.alpha:.2f}")
+    if print_csv:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

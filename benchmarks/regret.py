@@ -1,0 +1,64 @@
+"""Paper Fig 7: expected cumulative regret (20 reshuffled runs, 95% CI)
+for SplitEE and SplitEE-S."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import calibrated_cost, load_profile
+from repro.core import cumulative_regret, run_many
+from repro.data.profiles import PROFILE_DATASETS
+
+HORIZON = 20_000  # regret curves saturate well before this (paper: ~2000)
+
+
+def regret_curve(conf, cost, *, side_info: bool, num_runs: int = 20,
+                 seed: int = 0):
+    conf = conf[:HORIZON]
+    out = run_many(conf, jax.random.PRNGKey(seed), cost=cost,
+                   side_info=side_info, num_runs=num_runs)
+    perms = np.asarray(out["perm"])
+    arms = np.asarray(out["arm"])
+    curves = []
+    for r in range(num_runs):
+        creg = np.asarray(cumulative_regret(
+            conf[perms[r]], arms[r], cost, side_info=side_info))
+        curves.append(creg)
+    curves = np.stack(curves)          # (R, N)
+    mean = curves.mean(0)
+    ci = 1.96 * curves.std(0) / np.sqrt(num_runs)
+    return mean, ci
+
+
+def run(print_csv: bool = True, datasets=None):
+    rows = []
+    for name in (datasets or PROFILE_DATASETS):
+        t0 = time.time()
+        conf, correct, _ = load_profile(name)
+        cost, _ = calibrated_cost(conf, correct, offload=5.0)
+        m1, c1 = regret_curve(conf, cost, side_info=False)
+        m2, c2 = regret_curve(conf, cost, side_info=True)
+        dt = (time.time() - t0) * 1e6 / min(len(conf), HORIZON)
+        n = len(m1)
+        # saturation point: first t where remaining regret growth < 5%
+        def sat(m):
+            growth = m[-1] - m
+            thresh = 0.05 * m[-1]
+            idx = np.argmax(growth < thresh)
+            return int(idx)
+        rows.append(
+            f"regret/{name},{dt:.2f},"
+            f"splitee_final={m1[-1]:.1f}±{c1[-1]:.1f},"
+            f"splitee_s_final={m2[-1]:.1f}±{c2[-1]:.1f},"
+            f"sat_splitee={sat(m1)},sat_splitee_s={sat(m2)},"
+            f"sublinear={(m1[-1]/n) < 0.5*(m1[n//10]/(n//10))}")
+    if print_csv:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

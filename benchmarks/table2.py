@@ -1,0 +1,37 @@
+"""Paper Table 2: accuracy/cost of SplitEE, SplitEE-S and baselines across
+the five evaluation datasets at the worst-case offloading cost o = 5*lambda.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import (calibrated_cost, eval_bandit, eval_baselines,
+                               load_profile, table_row)
+from repro.data.profiles import PROFILE_DATASETS
+
+
+def run(print_csv: bool = True):
+    rows = []
+    for name in PROFILE_DATASETS:
+        t0 = time.time()
+        conf, correct, spec = load_profile(name)
+        cost, n_val = calibrated_cost(conf, correct, offload=5.0)
+        base = eval_baselines(conf, correct, cost)
+        final = base["final"]
+        sp = eval_bandit(conf, correct, cost, side_info=False)
+        sps = eval_bandit(conf, correct, cost, side_info=True)
+        dt = (time.time() - t0) * 1e6 / conf.shape[0]
+        for label, res in [("final", final), ("random", base["random"]),
+                           ("deebert", base["deebert"]),
+                           ("elasticbert", base["elasticbert"]),
+                           ("splitee", sp), ("splitee_s", sps)]:
+            rows.append(f"table2/{name}/{label},{dt:.2f},"
+                        + table_row(label, res, final))
+    if print_csv:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,78 @@
+"""End-to-end edge/cloud serving demo (the paper's Figure 1 pipeline):
+
+  1. train a multi-exit testbed on the calibration domain (stage ii),
+  2. calibrate alpha on its labeled validation split,
+  3. stream the shifted evaluation domain through the online SplitEE
+     controller driving two jitted device functions (edge half / cloud
+     half) with the offload payload metered in bytes,
+  4. compare SplitEE vs SplitEE-S vs final-exit / cascade baselines.
+
+    PYTHONPATH=src python examples/serve_splitee.py --samples 800
+"""
+import argparse
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CostModel, calibrate_alpha, confidence_cascade, final_exit
+from repro.data import OnlineStream, make_dataset
+from repro.launch.serve import build_testbed
+from repro.launch.train import exit_accuracy
+from repro.serving import EdgeCloudRuntime, serve_stream
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=800)
+    ap.add_argument("--layers", type=int, default=6)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--offload", type=float, default=5.0)
+    ap.add_argument("--eval-domain", default="imdb_like")
+    args = ap.parse_args()
+
+    cfg, params, model, _, eval_data, (conf_val, correct_val), log = \
+        build_testbed(layers=args.layers, steps=args.steps,
+                      eval_domain=args.eval_domain)
+    print(f"testbed trained (final loss {log[-1]['loss']:.4f})")
+
+    cost = CostModel(num_layers=cfg.num_layers, offload=args.offload)
+    alpha = calibrate_alpha(conf_val, cost, correct_val)
+    cost = dataclasses.replace(cost, alpha=alpha)
+    print(f"alpha={alpha:.2f} (labeled validation split, "
+          f"fine-tune domain)")
+
+    runtime = EdgeCloudRuntime(cfg)
+    results = {}
+    for side_info, label in [(False, "SplitEE"), (True, "SplitEE-S")]:
+        stream = OnlineStream(eval_data, seed=0)
+        out = serve_stream(runtime, params, stream, cost,
+                           side_info=side_info, max_samples=args.samples)
+        results[label] = out
+        arms = np.bincount(out["arms"][-200:],
+                           minlength=cfg.num_layers)
+        print(f"{label:10s} acc={out['accuracy']:.3f} "
+              f"cost={out['cost_total']:.0f}λ "
+              f"offload={out['offload_frac']:.0%} "
+              f"({out['offload_bytes']/1e6:.2f} MB shipped) "
+              f"modal split={int(arms.argmax()) + 1}")
+
+    n = results["SplitEE"]["n"]
+    order = OnlineStream(eval_data, seed=0).order[:n]
+    sub = {k: v[order] for k, v in eval_data.items()}
+    conf_e, _, corr_e = exit_accuracy(model, params, sub)
+    fa, fc = final_exit(jnp.asarray(conf_e), jnp.asarray(corr_e), cost)
+    ca, cc = confidence_cascade(jnp.asarray(conf_e), jnp.asarray(corr_e),
+                                cost)
+    print(f"{'final-exit':10s} acc={float(fa.mean()):.3f} "
+          f"cost={float(fc.sum()):.0f}λ (reference)")
+    print(f"{'cascade':10s} acc={float(ca.mean()):.3f} "
+          f"cost={float(cc.sum()):.0f}λ (ElasticBERT-style, no offload)")
+    sp = results["SplitEE"]
+    print(f"==> SplitEE cost reduction vs final-exit: "
+          f"{100 * (1 - sp['cost_total'] / float(fc.sum())):.0f}% "
+          f"at {100 * (sp['accuracy'] - float(fa.mean())):+.1f} pts accuracy")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Minimal pytree checkpointing: npz payload + JSON tree manifest.
+
+bfloat16 leaves are stored as uint16 bit patterns (numpy has no bf16);
+dtypes are recorded in the manifest and restored on load.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _to_numpy(x):
+    x = jax.device_get(x)
+    if x.dtype == jnp.bfloat16:
+        return np.asarray(x).view(np.uint16), "bfloat16"
+    return np.asarray(x), str(x.dtype)
+
+
+def save_pytree(path: str, tree: PyTree) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves, _ = jax.tree.flatten(tree)
+    arrays, dtypes = {}, []
+    for i, leaf in enumerate(leaves):
+        arr, dt = _to_numpy(leaf)
+        arrays[f"leaf_{i}"] = arr
+        dtypes.append(dt)
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    paths = [
+        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in kp)
+        for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]
+    ]
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump({"num_leaves": len(leaves), "dtypes": dtypes,
+                   "paths": paths}, f)
+
+
+def load_pytree(path: str, like: PyTree) -> PyTree:
+    """Load into the structure of ``like`` (shape/dtype-checked)."""
+    data = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = jax.tree.flatten(like)
+    if manifest["num_leaves"] != len(leaves):
+        raise ValueError(
+            f"checkpoint has {manifest['num_leaves']} leaves, expected "
+            f"{len(leaves)}")
+    loaded = []
+    for i, ref in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        if manifest["dtypes"][i] == "bfloat16":
+            arr = jnp.asarray(arr.view(np.uint16)).view(jnp.bfloat16)
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(
+                f"checkpoint leaf {i} shape {arr.shape} != {ref.shape}")
+        loaded.append(jnp.asarray(arr))
+    return treedef.unflatten(loaded)

@@ -1,0 +1,24 @@
+"""The paper's contribution: SplitEE / SplitEE-S online split+exit policy."""
+from repro.core.rewards import CostModel, oracle_arm  # noqa: F401
+from repro.core.policy import (  # noqa: F401
+    BanditState,
+    bandit_step,
+    init_state,
+    run_many,
+    run_stream,
+    select_arm,
+    ucb_index,
+)
+from repro.core.regret import (  # noqa: F401
+    cumulative_regret,
+    oracle_policy_metrics,
+    per_sample_rewards,
+)
+from repro.core.baselines import (  # noqa: F401
+    confidence_cascade,
+    deebert_cascade,
+    final_exit,
+    random_exit,
+)
+from repro.core.thresholds import calibrate_alpha  # noqa: F401
+from repro.core.controller import SplitEEController  # noqa: F401

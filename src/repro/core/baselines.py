@@ -1,0 +1,75 @@
+"""Baselines from the paper §5.3, evaluated on (conf, correct) streams.
+
+* final-exit      — every sample inferred at layer L (cost lambda*L; the
+                    paper's benchmark row).
+* random-exit     — uniform random splitting layer; exit if confident else
+                    offload (SplitEE cost accounting).
+* DeeBERT-style   — sequential confidence cascade WITHOUT offloading:
+                    exit at the first layer whose (entropy-derived)
+                    confidence clears the threshold, else final layer;
+                    exits trained separately -> degraded early calibration
+                    (``miscalib`` knob).
+* ElasticBERT-style — same cascade with jointly-trained (better) exits.
+
+All functions return per-sample (acc, cost) arrays; aggregation happens in
+the benchmark layer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rewards import CostModel
+
+
+def final_exit(conf, correct, cost: CostModel):
+    n, L = conf.shape
+    acc = correct[:, -1].astype(jnp.float32)
+    c = jnp.full((n,), cost.lam * L)
+    return acc, c
+
+
+def random_exit(conf, correct, cost: CostModel, key):
+    """Random splitting layer + SplitEE-style exit/offload at it."""
+    n, L = conf.shape
+    arms = jax.random.randint(key, (n,), 0, L)
+    conf_i = jnp.take_along_axis(conf, arms[:, None], axis=1)[:, 0]
+    exits = (conf_i >= cost.alpha) | (arms == L - 1)
+    acc = jnp.where(exits,
+                    jnp.take_along_axis(correct, arms[:, None], axis=1)[:, 0],
+                    correct[:, -1]).astype(jnp.float32)
+    c = cost.sample_cost(arms + 1.0, exits, side_info=False)
+    return acc, c
+
+
+def confidence_cascade(conf, correct, cost: CostModel, *,
+                       threshold: float | None = None):
+    """ElasticBERT/DeeBERT-style: process layer by layer, exit at the first
+    layer whose confidence clears the threshold (no offload option).
+    Cost = lambda * exit_layer (inference at every traversed exit)."""
+    n, L = conf.shape
+    thr = cost.alpha if threshold is None else threshold
+    clears = conf >= thr                           # (N, L)
+    clears = clears.at[:, -1].set(True)            # final always exits
+    first = jnp.argmax(clears, axis=1)             # first True
+    acc = jnp.take_along_axis(correct, first[:, None], axis=1)[:, 0]
+    c = cost.lam * (first + 1.0)
+    return acc.astype(jnp.float32), c
+
+
+def deebert_cascade(conf, correct, cost: CostModel, key, *,
+                    miscalib: float = 0.15, threshold: float | None = None):
+    """DeeBERT trains exits separately (frozen backbone): early exits are
+    less calibrated. Model that as noise + optimism on early-exit
+    confidence before running the cascade (paper reports DeeBERT exiting
+    *later* on average yet less accurately)."""
+    n, L = conf.shape
+    depth = jnp.arange(1, L + 1) / L
+    noise = miscalib * (1.2 - depth)[None, :] * jax.random.normal(
+        key, conf.shape)
+    conf_d = jnp.clip(conf + noise, 0.0, 1.0)
+    # separately-trained early exits are also less accurate
+    flip = (jax.random.uniform(key, conf.shape)
+            < miscalib * (1.0 - depth)[None, :])
+    correct_d = jnp.where(flip, ~correct, correct)
+    return confidence_cascade(conf_d, correct_d, cost, threshold=threshold)

@@ -1,0 +1,88 @@
+"""Online edge/cloud controller — SplitEE wired to a *real* multi-exit
+model (not a simulated profile).
+
+The controller owns the bandit state host-side (O(L) scalar work per
+sample, exactly as it would run on a mobile CPU) and drives two jitted
+device functions:
+
+  edge_fn(params_edge, batch, depth)  -> (conf, pred, hidden_at_depth)
+  cloud_fn(params_cloud, hidden, depth) -> pred_final
+
+In the simulator both run on the same host; the *offload payload*
+(hidden activation at the split, (B, D) after pooling or (B, S, D) raw)
+is metered in bytes — this is the paper's communication cost `o` made
+concrete, and maps onto the pod-to-pod transfer in the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+from repro.core.policy import BanditState, init_state, select_arm
+from repro.core.rewards import CostModel
+
+
+@dataclasses.dataclass
+class SplitEEController:
+    cost: CostModel
+    beta: float = 1.0
+    side_info: bool = False
+
+    def __post_init__(self):
+        self.state = init_state(self.cost.num_layers)
+        self.history: Dict[str, list] = {
+            "arm": [], "exited": [], "reward": [], "cost": [],
+            "offload_bytes": [],
+        }
+
+    # numpy mirror of policy.bandit_step for host-side streaming
+    def choose_split(self) -> int:
+        L = self.cost.num_layers
+        t = int(self.state.t)
+        if t < L:
+            return t % L
+        q, n = np.asarray(self.state.q), np.asarray(self.state.n)
+        ucb = q + self.beta * np.sqrt(np.log(max(t, 1)) / np.maximum(n, 1e-9))
+        return int(np.argmax(ucb))
+
+    def update(self, arm: int, conf_path: np.ndarray, conf_L: Optional[float],
+               offload_bytes: int = 0):
+        """conf_path: confidences observed on-device (length arm+1 for
+        SplitEE-S, or just [C_arm] for SplitEE). conf_L: final-layer
+        confidence if the sample was offloaded, else None."""
+        L = self.cost.num_layers
+        layer = arm + 1
+        conf_i = float(conf_path[-1])
+        exited = conf_i >= self.cost.alpha or layer == L
+        q = np.asarray(self.state.q).copy()
+        n = np.asarray(self.state.n).copy()
+        chat_L = conf_i if conf_L is None else float(conf_L)
+
+        def reward(j1, cj):  # j1: 1-indexed layer
+            g = self.cost.gamma(j1, side_info=self.side_info)
+            if cj >= self.cost.alpha or j1 == L:
+                return cj - self.cost.mu * g
+            return chat_L - self.cost.mu * (g + self.cost.offload)
+
+        if self.side_info:
+            assert len(conf_path) == layer
+            for j in range(layer):
+                r = reward(j + 1, float(conf_path[j]))
+                n[j] += 1
+                q[j] += (r - q[j]) / n[j]
+            r_arm = reward(layer, conf_i)
+        else:
+            r_arm = reward(layer, conf_i)
+            n[arm] += 1
+            q[arm] += (r_arm - q[arm]) / n[arm]
+
+        self.state = BanditState(q, n, self.state.t + 1)
+        c = self.cost.sample_cost(layer, exited, side_info=self.side_info)
+        self.history["arm"].append(arm)
+        self.history["exited"].append(exited)
+        self.history["reward"].append(float(r_arm))
+        self.history["cost"].append(float(c))
+        self.history["offload_bytes"].append(0 if exited else offload_bytes)
+        return exited

@@ -1,0 +1,41 @@
+"""Oracle + cumulative regret (paper eq. 3, Fig. 7)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rewards import CostModel, oracle_arm
+
+
+def per_sample_rewards(conf, cost: CostModel, *, side_info: bool):
+    """All-arm reward matrix r(i; x_t): (N, L)."""
+    n, L = conf.shape
+    layers = jnp.arange(1, L + 1)[None, :]
+    r, _ = cost.reward(layers, conf, conf[:, -1:], side_info=side_info)
+    return r
+
+
+def cumulative_regret(conf_stream, arms, cost: CostModel, *,
+                      side_info: bool):
+    """Expected cumulative regret of the arm sequence `arms` played on
+    `conf_stream` (already in play order): sum_t E[r(i*)] - E[r(i_t)],
+    with expectations estimated by the empirical mean over the stream
+    (paper's protocol: regret accumulates when the chosen arm is not i*).
+    """
+    r = per_sample_rewards(conf_stream, cost, side_info=side_info)
+    mean_r = jnp.mean(r, axis=0)                   # (L,) E[r(i)]
+    best = jnp.max(mean_r)
+    inst = best - mean_r[arms]                     # (N,)
+    return jnp.cumsum(inst)
+
+
+def oracle_policy_metrics(conf, correct, cost: CostModel, *,
+                          side_info: bool):
+    """Accuracy/cost of always playing i* (upper reference)."""
+    arm, _ = oracle_arm(cost, conf, side_info=side_info)
+    conf_i = conf[:, arm]
+    exits = (conf_i >= cost.alpha) | (arm == cost.num_layers - 1)
+    acc = jnp.where(exits, correct[:, arm], correct[:, -1])
+    c = cost.sample_cost(arm + 1.0, exits, side_info=side_info)
+    return {"arm": arm, "acc": jnp.mean(acc.astype(jnp.float32)),
+            "cost": jnp.sum(c)}

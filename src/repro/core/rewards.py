@@ -1,0 +1,65 @@
+"""Cost model and reward function — paper eq. (1)/(2).
+
+Per-layer cost lambda = lambda1 (processing) + lambda2 (exit inference),
+with lambda2 = lambda1 / 6 (paper §5.2: 5 matmuls to process a layer, 1 to
+infer). Arm i (1-indexed layer):
+
+  SplitEE    gamma_i = lambda1 * i + lambda2     (one exit check, at i)
+  SplitEE-S  gamma_i = lambda  * i               (exit check every layer)
+
+Reward (eq. 1):  r(i) = C_i - mu*gamma_i                 if C_i >= alpha or i = L
+                 r(i) = C_L - mu*(gamma_i + o)           otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+LAMBDA = 1.0
+LAMBDA1 = 6.0 / 7.0
+LAMBDA2 = 1.0 / 7.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    num_layers: int
+    alpha: float = 0.7          # confidence threshold
+    mu: float = 0.1             # cost<->confidence conversion (paper: 0.1)
+    offload: float = 5.0        # o, in lambda units (paper sweeps 1..5)
+    lam: float = LAMBDA
+    lam1: float = LAMBDA1
+    lam2: float = LAMBDA2
+
+    def gamma(self, layer, *, side_info: bool):
+        """Computation cost of splitting at `layer` (1-indexed array ok)."""
+        if side_info:               # SplitEE-S: infer at every layer
+            return self.lam * layer
+        return self.lam1 * layer + self.lam2
+
+    def reward(self, layer, conf_i, conf_L, *, side_info: bool):
+        """Vectorized eq. (1). `layer` 1-indexed; exit iff conf_i >= alpha
+        or layer == L."""
+        exits = (conf_i >= self.alpha) | (layer == self.num_layers)
+        g = self.gamma(layer, side_info=side_info)
+        r_exit = conf_i - self.mu * g
+        r_off = conf_L - self.mu * (g + self.offload)
+        return jnp.where(exits, r_exit, r_off), exits
+
+    def sample_cost(self, layer, exits, *, side_info: bool):
+        """Cost actually charged to the device for one sample (edge compute
+        + exit inference + offload if any). Cloud-side compute after
+        offloading is not charged (paper's accounting)."""
+        g = self.gamma(layer, side_info=side_info)
+        return g + jnp.where(exits, 0.0, self.offload)
+
+
+def oracle_arm(cost: CostModel, conf, *, side_info: bool):
+    """Empirical i* = argmax_i mean_t r(i; x_t) over a (N, L) confidence
+    matrix (eq. 2 estimated on the stream). Returns (arm0, mean_rewards)."""
+    n, L = conf.shape
+    layers = jnp.arange(1, L + 1)[None, :]
+    conf_L = conf[:, -1:]
+    r, _ = cost.reward(layers, conf, conf_L, side_info=side_info)
+    mean_r = jnp.mean(r, axis=0)
+    return int(jnp.argmax(mean_r)), mean_r

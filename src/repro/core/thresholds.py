@@ -1,0 +1,55 @@
+"""Confidence-threshold (alpha) calibration.
+
+The paper takes alpha from the ElasticBERT recipe: chosen on the labeled
+*fine-tuning* validation split (never the evaluation stream). We mirror
+that: alpha is picked on a grid to maximize the oracle split's expected
+reward (eq. 2) **subject to an accuracy constraint** when validation
+labels are available — exiting early on a miscalibrated-overconfident
+exit must not cost more than ``max_acc_drop`` accuracy on the validation
+split. Without labels it falls back to pure reward maximization.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rewards import CostModel, oracle_arm
+
+
+def _policy_metrics(conf, correct, cost: CostModel, *, side_info: bool):
+    """(accuracy, mean reward) of the oracle split under this cost model."""
+    arm, mean_r = oracle_arm(cost, conf, side_info=side_info)
+    conf_i = conf[:, arm]
+    exits = (conf_i >= cost.alpha) | (arm == cost.num_layers - 1)
+    acc = jnp.where(exits, correct[:, arm], correct[:, -1]).mean()
+    return float(acc), float(jnp.max(mean_r))
+
+
+def calibrate_alpha(conf, cost: CostModel, correct=None, *,
+                    side_info: bool = False, grid=None,
+                    max_acc_drop: float = 0.01) -> float:
+    grid = grid if grid is not None else np.linspace(0.5, 0.98, 13)
+    if correct is None:
+        best_alpha, best_val = float(grid[0]), -np.inf
+        for a in grid:
+            c = dataclasses.replace(cost, alpha=float(a))
+            _, mean_r = oracle_arm(c, conf, side_info=side_info)
+            val = float(jnp.max(mean_r))
+            if val > best_val:
+                best_val, best_alpha = val, float(a)
+        return best_alpha
+
+    correct = jnp.asarray(correct)
+    final_acc = float(correct[:, -1].mean())
+    feasible = []
+    for a in grid:
+        c = dataclasses.replace(cost, alpha=float(a))
+        acc, val = _policy_metrics(conf, correct, c, side_info=side_info)
+        feasible.append((acc >= final_acc - max_acc_drop, val, float(a)))
+    ok = [(v, a) for f, v, a in feasible if f]
+    if ok:
+        return max(ok)[1]
+    # nothing satisfies the constraint: take the most accurate alpha
+    return float(grid[int(np.argmax([f[1] for f in feasible]))])

@@ -1,0 +1,3 @@
+from repro.data.synthetic import DOMAINS, make_dataset  # noqa: F401
+from repro.data.stream import OnlineStream, batch_iterator  # noqa: F401
+from repro.data.profiles import simulate_exit_profiles, PROFILE_DATASETS  # noqa: F401

@@ -1,0 +1,33 @@
+"""Streaming / batching utilities for the online-unsupervised phase."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class OnlineStream:
+    """Reshuffled single-pass sample stream (the paper reshuffles per run)."""
+
+    def __init__(self, data, seed: int = 0):
+        self.data = data
+        n = len(data["labels"])
+        self.order = np.random.default_rng(seed).permutation(n)
+        self.n = n
+
+    def __iter__(self):
+        for i in self.order:
+            yield {k: v[i] for k, v in self.data.items()}
+
+    def __len__(self):
+        return self.n
+
+
+def batch_iterator(data, batch_size: int, seed: int = 0, *,
+                   drop_remainder: bool = True, epochs: int = 1):
+    n = len(data["labels"])
+    rng = np.random.default_rng(seed)
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        stop = n - n % batch_size if drop_remainder else n
+        for s in range(0, stop, batch_size):
+            idx = order[s:s + batch_size]
+            yield {k: v[idx] for k, v in data.items()}

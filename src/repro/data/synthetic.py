@@ -1,0 +1,103 @@
+"""Synthetic difficulty-structured classification data.
+
+Stand-in for the paper's GLUE/ELUE streams (offline container — see
+DESIGN.md §2). Construction preserves the properties SplitEE depends on:
+
+* per-sample difficulty heterogeneity — "easy" samples carry many shallow
+  lexical signals (recoverable by early exits); "hard" samples carry few
+  signals plus a *negation* token that flips the label (requires
+  composition, learned by deeper layers);
+* domain shift between the supervised fine-tune domain and the streaming
+  evaluation domain (signal vocabulary partially rotated, distractor
+  distribution changed), mirroring SST-2 -> IMDb/Yelp etc.
+
+Domains mirror the paper's five evaluation datasets + their fine-tune
+counterparts with matched class counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+VOCAB = 512
+SEQ_LEN = 64
+CLS = 1  # token 0 = PAD, token 1 = CLS (prepended; exits pool position 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Domain:
+    name: str
+    num_classes: int
+    signal_base: int          # where this domain's signal tokens start
+    signal_rotate: int        # shift of signal tokens vs fine-tune domain
+    distractor_lo: int = 64
+    distractor_hi: int = VOCAB
+    easy_frac: float = 0.6
+    num_signals: int = 8      # signal tokens per class
+    negation_token: int = 2
+
+
+# (fine-tune domain, evaluation domain) pairs as in the paper's Table 1.
+DOMAINS: Dict[str, Domain] = {
+    # sentiment (2-class): SST-2 -> IMDb / Yelp
+    "sst2_like": Domain("sst2_like", 2, signal_base=4, signal_rotate=0),
+    "imdb_like": Domain("imdb_like", 2, signal_base=4, signal_rotate=2,
+                        distractor_lo=128),
+    "yelp_like": Domain("yelp_like", 2, signal_base=4, signal_rotate=3,
+                        distractor_lo=96, easy_frac=0.65),
+    # entailment (2-class): RTE -> SciTail  (harder: fewer easy samples)
+    "rte_like": Domain("rte_like", 2, signal_base=24, signal_rotate=0,
+                       easy_frac=0.45),
+    "scitail_like": Domain("scitail_like", 2, signal_base=24,
+                           signal_rotate=3, easy_frac=0.35),
+    # NLI (3-class): MNLI -> SNLI
+    "mnli_like": Domain("mnli_like", 3, signal_base=40, signal_rotate=0),
+    "snli_like": Domain("snli_like", 3, signal_base=40, signal_rotate=2,
+                        easy_frac=0.55),
+    # paraphrase (2-class): MRPC -> QQP (QQP: overconfident-early regime)
+    "mrpc_like": Domain("mrpc_like", 2, signal_base=56, signal_rotate=0),
+    "qqp_like": Domain("qqp_like", 2, signal_base=56, signal_rotate=1,
+                       easy_frac=0.8),
+}
+
+
+def make_dataset(domain: str, n: int, seed: int = 0,
+                 seq_len: int = SEQ_LEN):
+    """Returns {"tokens": (N, seq_len) i32, "labels": (N,) i32,
+    "difficulty": (N,) i32 (0 easy / 1 hard)}."""
+    d = DOMAINS[domain]
+    rng = np.random.default_rng(seed)
+    c = rng.integers(0, d.num_classes, size=n)
+    easy = rng.random(n) < d.easy_frac
+    toks = rng.integers(d.distractor_lo, d.distractor_hi,
+                        size=(n, seq_len)).astype(np.int32)
+    toks[:, 0] = CLS
+
+    # signal tokens for class k: contiguous block, rotated per domain
+    def signals(k):
+        base = d.signal_base + k * d.num_signals
+        return (base + (np.arange(d.num_signals) + d.signal_rotate)
+                % d.num_signals)
+
+    labels = c.copy()
+    pos_pool = np.arange(1, seq_len)
+    for i in range(n):
+        sig = signals(c[i])
+        if easy[i]:
+            k = rng.integers(5, 9)           # many shallow signals
+            pos = rng.choice(pos_pool, size=k, replace=False)
+            toks[i, pos] = rng.choice(sig, size=k)
+        else:
+            k = rng.integers(2, 4)           # sparse signals + negation
+            pos = rng.choice(pos_pool, size=k + 1, replace=False)
+            toks[i, pos[:k]] = rng.choice(sig, size=k)
+            if rng.random() < 0.5:           # negation flips the label
+                toks[i, pos[k]] = d.negation_token
+                labels[i] = (c[i] + 1) % d.num_classes
+    return {
+        "tokens": toks,
+        "labels": labels.astype(np.int32),
+        "difficulty": (~easy).astype(np.int32),
+    }

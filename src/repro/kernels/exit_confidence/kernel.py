@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: fused exit-head confidence (online softmax over vocab).
+
+The per-layer exit inference (the paper's lambda_2 cost) computes
+``max_c softmax(h @ W)_c`` per sample. Done naively this writes a
+``(B, V)`` logits tensor to HBM for every exit (V up to 152k for the
+assigned Qwen archs). This kernel streams MXU-aligned vocab tiles of W
+through VMEM and keeps only the online (max, sum-exp, argmax) triple per
+sample, so HBM traffic is O(B*D + D*V) reads and O(B) writes.
+
+Grid: (num_b_tiles, num_v_tiles); the vocab axis is innermost, so for a
+fixed batch tile the vocab sweep is sequential and the running stats live
+in VMEM scratch across grid steps (TPU grid iteration is sequential).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_B = 128
+DEFAULT_BLOCK_V = 512
+
+NEG_INF = -1e30
+
+
+def _kernel(h_ref, w_ref, conf_ref, pred_ref, m_scr, s_scr, a_scr, *,
+            vocab_size: int, block_v: int, num_v_tiles: int):
+    vi = pl.program_id(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        m_scr[:] = jnp.full_like(m_scr, NEG_INF)
+        s_scr[:] = jnp.zeros_like(s_scr)
+        a_scr[:] = jnp.zeros_like(a_scr)
+
+    h = h_ref[:].astype(jnp.float32)              # (bb, D)
+    w = w_ref[:].astype(jnp.float32)              # (D, bv)
+    logits = jax.lax.dot_general(
+        h, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)       # (bb, bv)
+
+    # mask vocab padding in the last tile
+    col = vi * block_v + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    logits = jnp.where(col < vocab_size, logits, NEG_INF)
+
+    tile_max = jnp.max(logits, axis=-1)                        # (bb,)
+    tile_arg = (vi * block_v
+                + jnp.argmax(logits, axis=-1).astype(jnp.int32))
+
+    m_prev = m_scr[:]
+    s_prev = s_scr[:]
+    m_new = jnp.maximum(m_prev, tile_max)
+    # rescale previous sum and add this tile's contribution
+    s_new = (s_prev * jnp.exp(m_prev - m_new)
+             + jnp.sum(jnp.exp(logits - m_new[:, None]), axis=-1))
+    a_new = jnp.where(tile_max > m_prev, tile_arg, a_scr[:])
+
+    m_scr[:] = m_new
+    s_scr[:] = s_new
+    a_scr[:] = a_new
+
+    @pl.when(vi == num_v_tiles - 1)
+    def _finish():
+        # max softmax prob = exp(m - logsumexp) = 1 / sum exp(l - m)
+        conf_ref[:] = (1.0 / s_scr[:]).astype(conf_ref.dtype)
+        pred_ref[:] = a_scr[:]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_v", "interpret"))
+def exit_confidence_pallas(h, w, *, block_b: int = DEFAULT_BLOCK_B,
+                           block_v: int = DEFAULT_BLOCK_V,
+                           interpret: bool = False):
+    """h: (B, D), w: (D, V) -> (conf (B,) f32, pred (B,) i32)."""
+    b, d = h.shape
+    d2, v = w.shape
+    assert d == d2, (h.shape, w.shape)
+    block_b = min(block_b, max(b, 8))
+    block_v = min(block_v, v) if v < block_v else block_v
+    nb = pl.cdiv(b, block_b)
+    nv = pl.cdiv(v, block_v)
+
+    grid = (nb, nv)
+    out_shapes = (
+        jax.ShapeDtypeStruct((b,), jnp.float32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+    )
+    kern = functools.partial(_kernel, vocab_size=v, block_v=block_v,
+                             num_v_tiles=nv)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda bi, vi: (bi, 0)),
+            pl.BlockSpec((d, block_v), lambda bi, vi: (0, vi)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_b,), lambda bi, vi: (bi,)),
+            pl.BlockSpec((block_b,), lambda bi, vi: (bi,)),
+        ),
+        scratch_shapes=(
+            pltpu.VMEM((block_b,), jnp.float32),
+            pltpu.VMEM((block_b,), jnp.float32),
+            pltpu.VMEM((block_b,), jnp.int32),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(h, w)

@@ -1,0 +1,35 @@
+"""Jit'd public wrapper for the fused exit-confidence op.
+
+Routing: ``backend="pallas_interpret"`` (CPU validation), ``"pallas"``
+(TPU), or ``"ref"`` (pure jnp; also the default on CPU serving paths where
+interpret-mode would be slow). Bias support is folded in by augmenting the
+hidden vector with a constant 1 column (keeps the kernel bias-free).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.exit_confidence.kernel import exit_confidence_pallas
+from repro.kernels.exit_confidence.ref import exit_confidence_ref
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "block_b", "block_v"))
+def exit_confidence(h, w, bias=None, *, backend: str = "ref",
+                    block_b: int = 128, block_v: int = 512):
+    """Fused ``max_c softmax(h @ w + bias)`` -> (confidence, prediction).
+
+    h: (B, D); w: (D, V); bias: (V,) or None.
+    Returns (conf (B,) float32, pred (B,) int32).
+    """
+    if backend == "ref":
+        return exit_confidence_ref(h, w, bias)
+    if bias is not None:
+        ones = jnp.ones(h.shape[:-1] + (1,), h.dtype)
+        h = jnp.concatenate([h, ones], axis=-1)
+        w = jnp.concatenate([w, bias[None, :].astype(w.dtype)], axis=0)
+    interpret = backend == "pallas_interpret"
+    return exit_confidence_pallas(h, w, block_b=block_b, block_v=block_v,
+                                  interpret=interpret)

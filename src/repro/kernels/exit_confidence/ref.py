@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused exit-confidence op.
+
+Given pooled hidden states ``h (B, D)`` and an exit head ``w (D, V)``
+(+ optional bias), return the paper's confidence ``C_i = max_c softmax(l)_c``
+and the argmax class — materializing the full logits (the thing the Pallas
+kernel avoids).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def exit_confidence_ref(h, w, bias=None):
+    logits = jnp.asarray(h, jnp.float32) @ jnp.asarray(w, jnp.float32)
+    if bias is not None:
+        logits = logits + jnp.asarray(bias, jnp.float32)
+    m = jnp.max(logits, axis=-1)
+    s = jnp.sum(jnp.exp(logits - m[:, None]), axis=-1)
+    conf = 1.0 / s  # exp(m - logsumexp) = 1 / sum exp(l - m)
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return conf, pred

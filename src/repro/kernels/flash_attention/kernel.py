@@ -1,0 +1,120 @@
+"""Pallas TPU flash attention (prefill/train): causal + sliding-window.
+
+Online-softmax block attention. Grid = (B*H, Sq_tiles, Skv_tiles); the KV
+axis is innermost/sequential so (m, l, acc) scratch carries across KV tiles
+in VMEM. Block shapes are MXU-aligned (128 lanes); masking uses global
+position indices, so the q tile offset (skv - sq, for decode-style suffix
+queries) is handled uniformly.
+
+GQA is resolved in ops.py (kv heads repeated to q heads before the call —
+on TPU the repeat is a cheap VMEM broadcast fused by XLA; the kernel sees
+MHA layout).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int,
+            block_q: int, block_k: int, num_k_tiles: int, q_offset: int,
+            skv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[:] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[:] = jnp.zeros_like(l_scr)
+        acc_scr[:] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale           # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                   # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                   # (bk, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+
+    q_pos = (qi * block_q + q_offset
+             + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0))
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < skv          # padded KV columns carry garbage (even NaN)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, jnp.where(jnp.isnan(s), NEG_INF, s), NEG_INF)
+    v = jnp.where((ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, v.shape, 0)) < skv, v, 0.0)
+
+    m_prev = m_scr[:]
+    m_tile = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_tile)
+    p = jnp.exp(s - m_new[:, None])
+    # fully-masked rows: keep p exactly zero (exp(NEG_INF - NEG_INF)=1 trap)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_scr[:] * alpha + jnp.sum(p, axis=-1)
+    acc_scr[:] = acc_scr[:] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[:] = m_new
+    l_scr[:] = l_new
+
+    @pl.when(ki == num_k_tiles - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[:], 1e-30)
+        o_ref[0] = (acc_scr[:] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           scale: float | None = None,
+                           block_q: int = DEFAULT_BLOCK_Q,
+                           block_k: int = DEFAULT_BLOCK_K,
+                           interpret: bool = False):
+    """q: (B, H, Sq, d); k, v: (B, H, Skv, d) -> (B, H, Sq, d)."""
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    nq = pl.cdiv(sq, block_q)
+    nk = pl.cdiv(skv, block_k)
+    bh = b * h
+    qr = q.reshape(bh, sq, d)
+    kr = k.reshape(bh, skv, d)
+    vr = v.reshape(bh, skv, d)
+
+    kern = functools.partial(
+        _kernel, scale=float(scale), causal=causal, window=int(window),
+        block_q=block_q, block_k=block_k, num_k_tiles=nk,
+        q_offset=skv - sq, skv=skv)
+    out = pl.pallas_call(
+        kern,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda g, qi, ki: (g, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda g, qi, ki: (g, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda g, qi, ki: (g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda g, qi, ki: (g, qi, 0)),
+        scratch_shapes=(
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for block attention (causal / sliding-window, GQA)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_ref(q, k, v, *, causal: bool = True, window: int = 0,
+            scale: float | None = None):
+    """q: (B, H, Sq, d); k, v: (B, H, Skv, d). Sq positions are the LAST
+    Sq positions of the Skv timeline (supports decode: Sq=1, Skv=cache)."""
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(sq)[:, None] + (skv - sq)
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jnp.exp(logits - logits.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def gqa_ref(q, k, v, **kw):
+    """q: (B, Hq, Sq, d); k, v: (B, Hkv, Skv, d) with Hq % Hkv == 0."""
+    hq, hkv = q.shape[1], k.shape[1]
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    return mha_ref(q, k, v, **kw)

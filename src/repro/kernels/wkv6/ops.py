@@ -1,0 +1,20 @@
+"""Jit'd public wrapper for the RWKV6 WKV recurrence."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.wkv6.kernel import wkv6_pallas
+from repro.kernels.wkv6.ref import wkv6_ref
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "chunk"))
+def wkv6(r, k, v, w, u, *, backend: str = "ref", chunk: int = 128):
+    """RWKV6 token-mix recurrence. See ref.py for semantics.
+
+    Returns (y (B,H,T,dv) f32, final_state (B,H,dk,dv) f32)."""
+    if backend == "ref":
+        return wkv6_ref(r, k, v, w, u)
+    return wkv6_pallas(r, k, v, w, u, chunk=chunk,
+                       interpret=(backend == "pallas_interpret"))

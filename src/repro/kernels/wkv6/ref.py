@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) WKV recurrence.
+
+Per head with state S in R^{dk x dv}, data-dependent decay w_t and bonus u:
+
+    y_t[j] = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] * k_t[i] * v_t[j])
+    S_t    = diag(w_t) @ S_{t-1} + k_t v_t^T
+
+All math in float32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, initial_state=None):
+    """r,k,w: (B, H, T, dk); v: (B, H, T, dv); u: (H, dk).
+
+    Returns (y (B, H, T, dv), final_state (B, H, dk, dv))."""
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+    u = u.astype(f32)
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, dk, dv), f32)
+
+    def head_scan(rh, kh, vh, wh, uh, s0):
+        def step(s, inp):
+            rt, kt, vt, wt = inp
+            kv = kt[:, None] * vt[None, :]
+            y = jnp.sum((s + uh[:, None] * kv) * rt[:, None], axis=0)
+            s_new = wt[:, None] * s + kv
+            return s_new, y
+
+        s_fin, ys = jax.lax.scan(step, s0, (rh, kh, vh, wh))
+        return ys, s_fin
+
+    fn = jax.vmap(jax.vmap(head_scan, in_axes=(0, 0, 0, 0, 0, 0)),
+                  in_axes=(0, 0, 0, 0, None, 0))
+    y, s = fn(r, k, v, w, u, initial_state)
+    return y, s

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing this module never
+touches jax device state. Target: TPU v5e, 256 chips/pod.
+
+  single-pod : (16, 16)    axes ("data", "model")
+  multi-pod  : (2, 16, 16) axes ("pod", "data", "model") — 512 chips
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, dp: int = 16,
+                         tp: int = 16):
+    """Standard mesh: (16, 16) per pod. ``dp``/``tp`` re-split the same
+    256 chips (dp*tp must equal 256) — a per-arch layout lever used by the
+    perf pass (e.g. rwkv6's 40 heads divide an 8-way model axis but not a
+    16-way one; §Perf it.3)."""
+    assert dp * tp == 256, (dp, tp)
+    shape = (2, dp, tp) if multi_pod else (dp, tp)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+AXIS_MAP_SINGLE = {"batch": ("data",), "model": "model", "seq": None}
+AXIS_MAP_MULTI = {"batch": ("pod", "data"), "model": "model", "seq": None}
+
+
+def axis_map(multi_pod: bool):
+    return AXIS_MAP_MULTI if multi_pod else AXIS_MAP_SINGLE

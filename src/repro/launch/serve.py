@@ -1,0 +1,87 @@
+"""Serving driver: train a multi-exit classifier on the calibration domain,
+then stream the (shifted) evaluation domain through the online SplitEE
+edge/cloud runtime — the paper's full pipeline (stages i-iii) end to end.
+
+    PYTHONPATH=src python -m repro.launch.serve --samples 1500
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import (CostModel, calibrate_alpha, confidence_cascade,
+                        final_exit)
+from repro.data import OnlineStream, make_dataset
+from repro.data.synthetic import DOMAINS, VOCAB
+from repro.launch.train import exit_accuracy, train_classifier
+from repro.serving import EdgeCloudRuntime, serve_stream
+
+
+def build_testbed(*, layers: int = 6, steps: int = 300,
+                  calib_domain: str = "sst2_like",
+                  eval_domain: str = "imdb_like", n_train: int = 6144,
+                  n_eval: int = 4096, seed: int = 0):
+    """Train the multi-exit testbed (paper stage ii) and return everything
+    the serving phase needs."""
+    base = get_smoke_config("elasticbert12")
+    cfg = dataclasses.replace(
+        base, num_layers=layers, d_model=128, num_heads=4, num_kv_heads=4,
+        d_ff=512, vocab_size=VOCAB,
+        num_classes=DOMAINS[calib_domain].num_classes, dtype="float32")
+    train_data = make_dataset(calib_domain, n_train, seed=seed)
+    params, model, log = train_classifier(cfg, train_data, steps=steps,
+                                          batch_size=64, seed=seed)
+    eval_data = make_dataset(eval_domain, n_eval, seed=seed + 1)
+    # alpha calibrated on the *fine-tune* domain validation slice (labeled)
+    val = make_dataset(calib_domain, 1024, seed=seed + 2)
+    conf_val, _, correct_val = exit_accuracy(model, params, val)
+    return cfg, params, model, train_data, eval_data, (conf_val,
+                                                       correct_val), log
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=1000)
+    ap.add_argument("--layers", type=int, default=6)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--offload", type=float, default=5.0)
+    ap.add_argument("--side-info", action="store_true")
+    ap.add_argument("--eval-domain", default="imdb_like")
+    args = ap.parse_args()
+
+    cfg, params, model, _, eval_data, (conf_val, correct_val), log = \
+        build_testbed(layers=args.layers, steps=args.steps,
+                      eval_domain=args.eval_domain)
+    print(f"trained multi-exit testbed: final loss {log[-1]['loss']:.4f}")
+
+    cost = CostModel(num_layers=cfg.num_layers, offload=args.offload)
+    alpha = calibrate_alpha(conf_val, cost, correct_val)
+    cost = dataclasses.replace(cost, alpha=alpha)
+    print(f"calibrated alpha={alpha:.2f}")
+
+    runtime = EdgeCloudRuntime(cfg)
+    stream = OnlineStream(eval_data, seed=0)
+    out = serve_stream(runtime, params, stream, cost,
+                       side_info=args.side_info, max_samples=args.samples)
+    variant = "SplitEE-S" if args.side_info else "SplitEE"
+    print(f"{variant}: n={out['n']} acc={out.get('accuracy', float('nan')):.3f} "
+          f"cost={out['cost_total']:.0f}λ offload_frac={out['offload_frac']:.2f} "
+          f"offloaded={out['offload_bytes']/1e6:.1f}MB")
+
+    # reference: final-exit on the same samples
+    from repro.launch.train import exit_accuracy as ea
+    conf_e, _, corr_e = ea(model, params, {
+        k: v[stream.order[:out["n"]]] for k, v in eval_data.items()})
+    import jax.numpy as jnp
+    fa, fc = final_exit(jnp.asarray(conf_e), jnp.asarray(corr_e), cost)
+    print(f"final-exit: acc={float(fa.mean()):.3f} cost={float(fc.sum()):.0f}λ")
+    ca, cc = confidence_cascade(jnp.asarray(conf_e), jnp.asarray(corr_e), cost)
+    print(f"cascade(ElasticBERT-style): acc={float(ca.mean()):.3f} "
+          f"cost={float(cc.sum()):.0f}λ")
+
+
+if __name__ == "__main__":
+    main()

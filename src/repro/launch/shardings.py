@@ -1,0 +1,112 @@
+"""Input/parameter sharding builders for the dry-run and launchers.
+
+Every spec is *sanitized* against divisibility: a dimension that does not
+divide evenly over its assigned mesh axes falls back to replication (GSPMD
+could pad, but even sharding keeps memory analysis honest).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.sharding.rules import param_specs
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def sanitize_spec(mesh: Mesh, spec: P, shape) -> P:
+    out = []
+    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axes is not None and dim % _axes_size(mesh, axes) == 0:
+            out.append(axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def sharding_tree(mesh: Mesh, spec_tree, shape_tree):
+    """NamedSharding pytree with divisibility sanitation."""
+    return jax.tree.map(
+        lambda s, x: NamedSharding(mesh, sanitize_spec(mesh, s, x.shape)),
+        spec_tree, shape_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def param_shardings(mesh: Mesh, abstract: Any, *,
+                    axis_map: Dict[str, Any] | None = None,
+                    fsdp_paths: str | None = None):
+    return sharding_tree(mesh, param_specs(abstract, axis_map, fsdp_paths),
+                         abstract)
+
+
+def _leaf_spec(leaf, batch_ax, model_ax="model") -> P:
+    """Heuristic input sharding by rank/meaning (see dryrun callers)."""
+    nd = leaf.ndim
+    if nd == 0:
+        return P()
+    if nd == 1:          # (B,) token ids
+        return P(batch_ax)
+    if nd == 2:          # (B, S) tokens/labels or (B, W) cache pos
+        return P(batch_ax, None)
+    if nd == 3:          # (B, S, D) embeds/frames | (L, B, D) states
+        return P(batch_ax, None, None)
+    return P(batch_ax, *([None] * (nd - 1)))
+
+
+def batch_shardings(mesh: Mesh, batch_tree, multi_pod: bool):
+    batch_ax = ("pod", "data") if multi_pod else ("data",)
+    return jax.tree.map(
+        lambda x: NamedSharding(
+            mesh, sanitize_spec(mesh, _leaf_spec(x, batch_ax), x.shape)),
+        batch_tree)
+
+
+def cache_shardings(mesh: Mesh, caches, multi_pod: bool):
+    """Decode caches are stacked (L, B, ...): batch on axis 1; attention
+    K/V shard the KV-head axis over "model" when it divides, else the
+    WINDOW axis (sharding head_dim would split the attention contraction
+    and force a (B,H,G,W) score psum per layer — §Perf it.1: 235 MB/layer
+    on deepseek). The ring "pos" buffer follows the K/V window decision."""
+    batch_ax = ("pod", "data") if multi_pod else ("data",)
+
+    # one global decision: do KV heads divide the model axis?
+    heads_divide = True
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in kp)
+        if leaf.ndim == 5 and pstr.split("/")[-1] in ("k", "v"):
+            heads_divide = leaf.shape[3] % mesh.shape["model"] == 0
+            break
+
+    def spec(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        nd = leaf.ndim
+        if nd == 5 and ("k" in name.split("/") or "v" in name.split("/")):
+            s = P(None, batch_ax, None, "model", None) if heads_divide \
+                else P(None, batch_ax, "model", None, None)
+            return sanitize_spec(mesh, s, leaf.shape)
+        if nd == 3 and name.endswith("pos") and not heads_divide:
+            return sanitize_spec(mesh, P(None, batch_ax, "model"),
+                                 leaf.shape)
+        if nd == 5:      # ssm (L, B, H, P, N) / mamba states
+            return sanitize_spec(
+                mesh, P(None, batch_ax, "model", None, None), leaf.shape)
+        if nd >= 2:
+            pad = [None] * (nd - 2)
+            return sanitize_spec(mesh, P(None, batch_ax, *pad), leaf.shape)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(mesh, spec(p, x)), caches)

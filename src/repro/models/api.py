@@ -1,0 +1,126 @@
+"""Unified model facade: dispatches decoder-only vs enc-dec, builds
+ShapeDtypeStruct input specs per (config × input shape) for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import encdec, transformer
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    backend: str = "ref"            # kernels: ref | pallas | pallas_interpret
+
+    # ------------------------------------------------------------------ init
+    @property
+    def is_encdec(self) -> bool:
+        return self.cfg.encoder is not None
+
+    @property
+    def _mod(self):
+        return encdec if self.is_encdec else transformer
+
+    def init(self, key) -> PyTree:
+        return self._mod.init_params(self.cfg, key)
+
+    def abstract_params(self) -> PyTree:
+        return self._mod.abstract_params(self.cfg)
+
+    # ----------------------------------------------------------------- steps
+    def train_loss(self, params, batch, *, remat: bool = True):
+        return self._mod.train_loss(params, self.cfg, batch,
+                                    backend=self.backend, remat=remat)
+
+    def forward_exits(self, params, batch, *, conf_backend: str = "ref"):
+        if self.is_encdec:
+            raise NotImplementedError(
+                "streaming exits for enc-dec run through decode_step")
+        return transformer.forward_exits(params, self.cfg, batch,
+                                         backend=self.backend,
+                                         conf_backend=conf_backend)
+
+    def prefill(self, params, batch, *, cache_seq_len: int = 0):
+        return self._mod.prefill(params, self.cfg, batch,
+                                 backend=self.backend,
+                                 cache_seq_len=cache_seq_len)
+
+    def init_caches(self, batch: int, seq_len: int):
+        return self._mod.init_caches(self.cfg, batch, seq_len)
+
+    def decode_step(self, params, caches, token, cur_index, *, extras=None,
+                    split_layer=None, all_exits: bool = False,
+                    window_seq_len: int = 0):
+        if self.is_encdec:
+            return encdec.decode_step(
+                params, self.cfg, caches, extras["cross_kv"], token,
+                cur_index, split_layer=split_layer, all_exits=all_exits,
+                window_seq_len=window_seq_len)
+        return transformer.decode_step(
+            params, self.cfg, caches, token, cur_index,
+            split_layer=split_layer, all_exits=all_exits,
+            window_seq_len=window_seq_len)
+
+    # ----------------------------------------------------------- input specs
+    def input_specs(self, shape: InputShape) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every input of the step the shape
+        exercises (train -> train_step; prefill -> prefill; decode ->
+        decode_step). No device allocation."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        dt = jnp.dtype(cfg.dtype)
+        sds = jax.ShapeDtypeStruct
+
+        def token_batch(with_labels: bool):
+            batch: Dict[str, Any] = {}
+            if cfg.modality == "vision_stub":
+                batch["embeds"] = sds((b, s, cfg.d_model), dt)
+            elif cfg.modality == "audio_stub":
+                batch["frames"] = sds((b, cfg.encoder.source_len,
+                                       cfg.encoder.d_model), dt)
+                batch["tokens"] = sds((b, s), i32)
+            else:
+                batch["tokens"] = sds((b, s), i32)
+            if with_labels:
+                if cfg.num_classes:
+                    batch["labels"] = sds((b,), i32)
+                else:
+                    batch["labels"] = sds((b, s), i32)
+            return batch
+
+        if shape.kind == "train":
+            return {"batch": token_batch(True)}
+        if shape.kind == "prefill":
+            return {"batch": token_batch(False)}
+        # decode: one new token against a seq_len cache
+        caches = jax.eval_shape(
+            functools.partial(self.init_caches, b, s))
+        spec = {
+            "caches": caches,
+            "token": sds((b,), i32),
+            "cur_index": sds((), i32),
+        }
+        if self.is_encdec:
+            src = cfg.encoder.source_len
+            hd = cfg.resolved_head_dim
+            spec["extras"] = {"cross_kv": (
+                sds((cfg.num_layers, b, src, cfg.num_kv_heads, hd), dt),
+                sds((cfg.num_layers, b, src, cfg.num_kv_heads, hd), dt),
+            )}
+        if cfg.modality == "vision_stub":
+            spec["token"] = sds((b, 1, cfg.d_model), dt)
+        return spec
+
+
+def build_model(cfg: ModelConfig, backend: str = "ref") -> Model:
+    return Model(cfg, backend)

@@ -1,0 +1,277 @@
+"""Encoder-decoder backbone (SeamlessM4T v2 geometry).
+
+The audio frontend (mel + conv codec) is the sanctioned stub: the encoder
+consumes precomputed frame embeddings (B, S_src, D). Exits (the SplitEE
+technique) attach to the *decoder* stack — the split point indexes decoder
+layers; the encoder always runs fully (it is the input processing).
+
+Decoder layer = self-attn (causal, cached) + cross-attn (precomputed K/V)
++ MLP. The stack scans over stacked layer params like transformer.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.exit_confidence.ops import exit_confidence
+from repro.models import attention as attn
+from repro.models import mlp as ff
+from repro.models.common import (apply_norm, cross_entropy, dense_init,
+                                 embed_init, init_norm)
+from repro.models import transformer as _tr
+from repro.sharding import constrain
+
+
+def _init_enc_layer(cfg: ModelConfig, key):
+    e = cfg.encoder
+    hd = e.d_model // e.num_heads
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "ln1": init_norm(ks[0], e.d_model, cfg.norm, dt),
+        "attn": attn.init_attention(ks[1], e.d_model, e.num_heads,
+                                    e.num_kv_heads, hd, qkv_bias=False,
+                                    qk_norm=False, dtype=dt),
+        "ln2": init_norm(ks[2], e.d_model, cfg.norm, dt),
+        "mlp": ff.init_mlp(ks[3], e.d_model, e.d_ff, cfg.activation, dt),
+    }
+
+
+def _init_dec_layer(cfg: ModelConfig, key):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 7)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "ln1": init_norm(ks[0], d, cfg.norm, dt),
+        "self_attn": attn.init_attention(ks[1], d, cfg.num_heads,
+                                         cfg.num_kv_heads, hd,
+                                         qkv_bias=False, qk_norm=False,
+                                         dtype=dt),
+        "ln_x": init_norm(ks[2], d, cfg.norm, dt),
+        "cross_attn": attn.init_attention(ks[3], d, cfg.num_heads,
+                                          cfg.num_kv_heads, hd,
+                                          qkv_bias=False, qk_norm=False,
+                                          dtype=dt),
+        "ln2": init_norm(ks[4], d, cfg.norm, dt),
+        "mlp": ff.init_mlp(ks[5], d, cfg.d_ff, cfg.activation, dt),
+        "exit_norm": init_norm(ks[6], d, cfg.norm, dt),
+    }
+    return p
+
+
+def init_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.dtype)
+    enc_keys = jax.random.split(ks[0], cfg.encoder.num_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "embed": embed_init(ks[2], cfg.vocab_size, cfg.d_model, dt),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(cfg, k))(enc_keys),
+        "enc_norm": init_norm(ks[3], cfg.encoder.d_model, cfg.norm, dt),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(cfg, k))(dec_keys),
+        "final_norm": init_norm(ks[4], cfg.d_model, cfg.norm, dt),
+        "exit_w": dense_init(ks[5], cfg.d_model,
+                             cfg.num_classes or cfg.vocab_size, dt),
+    }
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def encode(params, cfg: ModelConfig, frames, *, backend: str = "ref"):
+    """frames: (B, S_src, D) stub embeddings -> encoder output."""
+    e = cfg.encoder
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    hd = e.d_model // e.num_heads
+
+    def body(xx, lp):
+        h = attn.attn_prefill(
+            lp["attn"], apply_norm(xx, lp["ln1"], cfg.norm), pos,
+            num_heads=e.num_heads, num_kv_heads=e.num_kv_heads, head_dim=hd,
+            causal=False, rope_theta=cfg.rope_theta, backend=backend)
+        xx = xx + h
+        h = ff.mlp_forward(lp["mlp"], apply_norm(xx, lp["ln2"], cfg.norm),
+                           cfg.activation)
+        return constrain(xx + h, "batch", None, None), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"],
+                        unroll=_tr._unroll())
+    return apply_norm(x, params["enc_norm"], cfg.norm)
+
+
+def cross_kv(params, cfg: ModelConfig, enc_out):
+    """Precompute per-decoder-layer cross-attention K/V (stacked (L, ...))."""
+    hd = cfg.resolved_head_dim
+
+    def per_layer(lp):
+        return attn.cross_attn_kv(lp["cross_attn"], enc_out,
+                                  num_kv_heads=cfg.num_kv_heads, head_dim=hd)
+
+    return jax.vmap(per_layer)(params["dec_layers"])
+
+
+def _dec_layer_full(cfg, lp, x, positions, ckv, *, backend):
+    hd = cfg.resolved_head_dim
+    h = attn.attn_prefill(
+        lp["self_attn"], apply_norm(x, lp["ln1"], cfg.norm), positions,
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads, head_dim=hd,
+        causal=True, rope_theta=cfg.rope_theta, backend=backend)
+    x = x + h
+    h = attn.cross_attn_apply(
+        lp["cross_attn"], apply_norm(x, lp["ln_x"], cfg.norm), ckv,
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads, head_dim=hd,
+        backend=backend)
+    x = x + h
+    h = ff.mlp_forward(lp["mlp"], apply_norm(x, lp["ln2"], cfg.norm),
+                       cfg.activation)
+    return constrain(x + h, "batch", None, None)
+
+
+def train_loss(params, cfg: ModelConfig, batch: Dict[str, Any], *,
+               backend: str = "ref", remat: bool = True,
+               exit_loss_weight: float = 1.0):
+    """Teacher-forced decoder CE at every exit + final layer."""
+    enc_out = encode(params, cfg, batch["frames"], backend=backend)
+    ckv = cross_kv(params, cfg, enc_out)
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                 (b, s))
+
+    def body(carry, inp):
+        xx = carry
+        lp, ckv_l = inp
+        xx = _dec_layer_full(cfg, lp, xx, positions, ckv_l, backend=backend)
+        hn = apply_norm(xx, lp["exit_norm"], cfg.norm)
+        logits = constrain(hn @ params["exit_w"], "batch", None, "model")
+        return xx, cross_entropy(logits[:, :-1], labels[:, 1:])
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, exit_losses = jax.lax.scan(body_fn, x,
+                                  (params["dec_layers"], ckv),
+                                  unroll=_tr._unroll())
+    xf = apply_norm(x, params["final_norm"], cfg.norm)
+    logits = constrain(xf @ params["exit_w"], "batch", None, "model")
+    final = cross_entropy(logits[:, :-1], labels[:, 1:])
+    return final + exit_loss_weight * jnp.mean(exit_losses)
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], *,
+            backend: str = "ref", cache_seq_len: int = 0):
+    """Enc-dec prefill: encode the source frames, precompute cross K/V,
+    teacher-forced pass over the target prefix building ring self-caches.
+    Returns (last-position logits, caches incl. cross_kv)."""
+    enc_out = encode(params, cfg, batch["frames"], backend=backend)
+    ckv = cross_kv(params, cfg, enc_out)
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    b, s, _ = x.shape
+    seq_total = cache_seq_len or s
+    window = cfg.effective_window(seq_total)
+    cache_window = window or seq_total
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                 (b, s))
+    hd = cfg.resolved_head_dim
+
+    def body(xx, inp):
+        lp, ckv_l = inp
+        h, (kk, vv) = attn.attn_prefill(
+            lp["self_attn"], apply_norm(xx, lp["ln1"], cfg.norm), positions,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=hd, causal=True, window=window,
+            rope_theta=cfg.rope_theta, backend=backend, return_kv=True)
+        xx = xx + h
+        h = attn.cross_attn_apply(
+            lp["cross_attn"], apply_norm(xx, lp["ln_x"], cfg.norm), ckv_l,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=hd, backend=backend)
+        xx = xx + h
+        h = ff.mlp_forward(lp["mlp"], apply_norm(xx, lp["ln2"], cfg.norm),
+                           cfg.activation)
+        xx = constrain(xx + h, "batch", None, None)
+        c = attn.init_cache(b, cache_window, cfg.num_kv_heads, hd,
+                            jnp.dtype(cfg.dtype))
+        c = attn.fill_cache(c, kk[:, -cache_window:], vv[:, -cache_window:],
+                            start=max(0, s - cache_window))
+        return xx, c
+
+    x, caches_stacked = jax.lax.scan(body, x, (params["dec_layers"], ckv),
+                                     unroll=_tr._unroll())
+    xf = apply_norm(x, params["final_norm"], cfg.norm)
+    logits = constrain(xf[:, -1, :] @ params["exit_w"], "batch", "model")
+    return logits, {"self": caches_stacked, "cross_kv": ckv}
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq_len: int):
+    dt = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    window = cfg.effective_window(seq_len) or seq_len
+    c = attn.init_cache(batch, window, cfg.num_kv_heads, hd, dt)
+    return {"self": jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), c)}
+
+
+def decode_step(params, cfg: ModelConfig, caches, ckv, token, cur_index, *,
+                split_layer=None, all_exits: bool = False,
+                window_seq_len: int = 0, conf_backend: str = "ref"):
+    """One-token decode against (cached self-attn + precomputed cross K/V).
+
+    Returns (logits, conf, pred, new_caches) like transformer.decode_step."""
+    hd = cfg.resolved_head_dim
+    window = cfg.effective_window(window_seq_len)
+    x = jnp.take(params["embed"], token.reshape(-1, 1), axis=0)
+
+    def body(xx, inp):
+        lp, st, ckv_l = inp
+        h, new_st = attn.attn_decode(
+            lp["self_attn"], apply_norm(xx, lp["ln1"], cfg.norm), st,
+            cur_index, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=hd, window=window,
+            rope_theta=cfg.rope_theta)
+        xx = xx + h
+        # cross-attn for one query token
+        q = (apply_norm(xx, lp["ln_x"], cfg.norm) @ lp["cross_attn"]["wq"])
+        b = xx.shape[0]
+        qg = q.reshape(b, cfg.num_kv_heads,
+                       cfg.num_heads // cfg.num_kv_heads, hd)
+        kf, vf = ckv_l
+        scores = jnp.einsum("bngd,bsnd->bngs", qg.astype(jnp.float32),
+                            kf.astype(jnp.float32)) * hd ** -0.5
+        probs = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bngs,bsnd->bngd", probs, vf.astype(jnp.float32))
+        o = o.reshape(b, 1, cfg.num_heads * hd).astype(xx.dtype)
+        xx = xx + o @ lp["cross_attn"]["wo"]
+        h = ff.mlp_forward(lp["mlp"], apply_norm(xx, lp["ln2"], cfg.norm),
+                           cfg.activation)
+        xx = xx + h
+        pooled = apply_norm(xx, lp["exit_norm"], cfg.norm)[:, -1, :]
+        return xx, (new_st, pooled)
+
+    x, (new_self, pooled) = jax.lax.scan(
+        body, x, (params["dec_layers"], caches["self"], ckv),
+        unroll=_tr._unroll())
+
+    l, bb, d = pooled.shape
+    if all_exits:
+        conf, pred = exit_confidence(pooled.reshape(l * bb, d),
+                                     params["exit_w"], backend=conf_backend)
+        conf, pred = conf.reshape(l, bb), pred.reshape(l, bb)
+    elif split_layer is not None:
+        h_split = jax.lax.dynamic_index_in_dim(pooled, split_layer, 0,
+                                               keepdims=False)
+        conf, pred = exit_confidence(h_split, params["exit_w"],
+                                     backend=conf_backend)
+    else:
+        conf = pred = None
+    xf = apply_norm(x, params["final_norm"], cfg.norm)
+    logits = constrain(xf[:, -1, :] @ params["exit_w"], "batch", "model")
+    return logits, conf, pred, {"self": new_self}

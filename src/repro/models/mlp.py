@@ -1,0 +1,115 @@
+"""Feed-forward blocks: SwiGLU, GELU MLP, and top-k MoE.
+
+The MoE uses the sort-free dense-dispatch formulation: tokens are scattered
+into per-expert capacity buffers (position-in-expert via a running one-hot
+cumsum), experts run as a single batched einsum over the expert axis, and
+results are gathered back weighted by router probabilities. Sharding: expert
+FFN inner dim shards over the "model" mesh axis (tensor-parallel experts —
+see DESIGN.md; expert-parallel over the expert axis is a hillclimb variant
+for arch with num_experts == model axis size).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.sharding import constrain
+
+
+# ------------------------------------------------------------------ dense FF
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str, dtype):
+    ks = jax.random.split(key, 3)
+    if activation == "swiglu":
+        return {
+            "wi": dense_init(ks[0], d_model, d_ff, dtype),
+            "wg": dense_init(ks[1], d_model, d_ff, dtype),
+            "wo": dense_init(ks[2], d_ff, d_model, dtype),
+        }
+    return {
+        "wi": dense_init(ks[0], d_model, d_ff, dtype),
+        "wo": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def mlp_forward(p, x, activation: str):
+    if activation == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    else:
+        h = jax.nn.gelu(x @ p["wi"])
+    return h @ p["wo"]
+
+
+# ----------------------------------------------------------------------- MoE
+
+def init_moe(key, d_model: int, d_ff: int, num_experts: int, dtype):
+    ks = jax.random.split(key, 4)
+    def stack(k, fan_in, fan_out):
+        kk = jax.random.split(k, num_experts)
+        return jnp.stack([dense_init(ki, fan_in, fan_out, dtype) for ki in kk])
+    return {
+        "router": dense_init(ks[0], d_model, num_experts, dtype),
+        "wi": stack(ks[1], d_model, d_ff),       # (E, D, F)
+        "wg": stack(ks[2], d_model, d_ff),
+        "wo": stack(ks[3], d_ff, d_model),       # (E, F, D)
+    }
+
+
+def moe_forward(p, x, *, num_experts: int, top_k: int,
+                capacity_factor: float = 1.25):
+    """x: (B, S, D) -> (B, S, D), aux = router load-balance loss."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = (xf @ p["router"]).astype(jnp.float32)       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, top_k)            # (T, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    capacity = int(max(top_k * t * capacity_factor / num_experts, top_k))
+
+    flat_e = top_e.reshape(-1)                            # (T*K,)
+    flat_w = top_p.reshape(-1)
+    tok_id = jnp.repeat(jnp.arange(t), top_k)
+
+    onehot = jax.nn.one_hot(flat_e, num_experts, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot        # (T*K, E)
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < capacity                                 # overflow dropped
+    pos = jnp.where(keep, pos, capacity - 1)
+
+    # dispatch: (E, C, D). The capacity dim is constrained to the batch
+    # ("data") axis: tokens are batch-sharded, so without the constraint
+    # GSPMD replicates the scatter and all-reduces multi-GB buffers per
+    # layer (§Perf it.2); capacity-sharded, the shard exchange lowers to
+    # all-to-all-sized traffic.
+    big = s > 1       # full-sequence pass (train/prefill); decode skips
+    buf = jnp.zeros((num_experts, capacity, d), x.dtype)
+    buf = buf.at[flat_e, pos].add(
+        jnp.where(keep[:, None], xf[tok_id], 0).astype(x.dtype),
+        mode="drop")
+    if big:
+        buf = constrain(buf, None, "batch", None)
+
+    # expert FFN (batched over expert axis; F shards over "model")
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    if big:
+        h = constrain(h, None, "batch", "model")
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["wo"])        # (E, C, D)
+    if big:
+        out_e = constrain(out_e, None, "batch", None)
+
+    # combine
+    gathered = out_e[flat_e, pos]                         # (T*K, D)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    contrib = gathered * flat_w[:, None].astype(x.dtype)
+    out = jnp.zeros((t, d), x.dtype).at[tok_id].add(contrib, mode="drop")
+    out = constrain(out, "batch", None)
+
+    # load-balance aux loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                          # (E,)
+    frac = jnp.mean(jax.nn.one_hot(top_e[:, 0], num_experts), axis=0)
+    aux = num_experts * jnp.sum(me * frac)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,138 @@
+"""RWKV6 (Finch) block: time-mix with data-dependent decay + channel-mix.
+
+Faithful structure (arXiv:2404.05892) with the low-rank data-dependent decay
+(ddlerp simplified to per-projection static lerp + LoRA on the decay), the
+bonus term u, SiLU output gate, and squared-ReLU channel mix. Token mixing
+runs through the wkv6 kernel (ops.py routes kernel vs pure-jnp oracle).
+
+Streaming state per layer = (last_token_shift_tm, last_token_shift_cm,
+wkv_state (B, H, dk, dv)) — this tuple is also the split-computing offload
+payload for this architecture (much smaller than a transformer KV cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.ops import wkv6
+from repro.models.common import dense_init
+from repro.sharding import constrain
+
+DECAY_LORA = 32
+
+
+def init_rwkv6(key, d_model: int, num_heads: int, d_ff: int, dtype):
+    head_dim = d_model // num_heads
+    ks = jax.random.split(key, 12)
+    p = {
+        # time-mix lerp coefficients for r/k/v/w/g
+        "mu": jnp.full((5, d_model), 0.5, dtype),
+        "wr": dense_init(ks[0], d_model, d_model, dtype),
+        "wk": dense_init(ks[1], d_model, d_model, dtype),
+        "wv": dense_init(ks[2], d_model, d_model, dtype),
+        "wg": dense_init(ks[3], d_model, d_model, dtype),
+        "wo": dense_init(ks[4], d_model, d_model, dtype),
+        # data-dependent decay: w = exp(-exp(decay_base + lora))
+        "decay_base": jnp.full((d_model,), -5.0, dtype),
+        "decay_a": dense_init(ks[5], d_model, DECAY_LORA, dtype),
+        "decay_b": dense_init(ks[6], DECAY_LORA, d_model, dtype),
+        "bonus": (jax.random.normal(ks[7], (num_heads, head_dim),
+                                    jnp.float32) * 0.1).astype(dtype),
+        # channel mix
+        "mu_cm": jnp.full((2, d_model), 0.5, dtype),
+        "cm_wr": dense_init(ks[8], d_model, d_model, dtype),
+        "cm_wk": dense_init(ks[9], d_model, d_ff, dtype),
+        "cm_wv": dense_init(ks[10], d_ff, d_model, dtype),
+    }
+    return p
+
+
+def _token_shift(x, last):
+    """x: (B, S, D); last: (B, D) = hidden before this chunk. Returns
+    (shifted x, new last)."""
+    prev = jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+    return prev, x[:, -1, :]
+
+
+def _decay(p, xw):
+    lora = jnp.tanh(xw @ p["decay_a"]) @ p["decay_b"]
+    logw = -jnp.exp(jnp.clip(
+        p["decay_base"].astype(jnp.float32) + lora.astype(jnp.float32),
+        -10.0, 2.0))
+    return jnp.exp(logw)  # in (0, 1)
+
+
+def time_mix(p, x, state, *, num_heads: int, backend: str = "ref",
+             chunk: int = 128):
+    """x: (B, S, D); state: (last (B,D), s (B,H,dk,dv)).
+
+    Returns (out (B,S,D), new_state)."""
+    b, s, d = x.shape
+    hd = d // num_heads
+    last, wkv_state = state
+    prev, new_last = _token_shift(x, last)
+    prev = prev.astype(x.dtype)     # `last` state is f32; avoid promotion
+    # lerp in the compute dtype: f32 (B, T, D) intermediates here made
+    # GSPMD move ~5 GB/layer of resharding traffic at 32k prefill
+    # (§Perf it.3)
+    mu = p["mu"].astype(x.dtype)
+    mix = [x + (prev - x) * mu[i] for i in range(5)]
+    xr, xk, xv, xw, xg = mix
+
+    # Gather the model-sharded projection outputs ONCE, flat and in the
+    # compute dtype, BEFORE the (H, hd) reshape: 40 heads do not divide
+    # the 16-way model axis, so reshaping sharded outputs makes GSPMD
+    # replicate each (B, H, T, dk) f32 tensor separately (§Perf it.3 —
+    # 263 GB/step at 32k prefill). One bf16 (B, S, D) gather per stream
+    # is ~5x less traffic; the recurrence then runs replicated over
+    # "model" (its flops are ~3 % of the layer).
+    def flat(xx, wproj):
+        out = xx @ wproj
+        # constrain only on full-sequence passes: at decode (s == 1) the
+        # gather costs more than it saves (§Perf it.1 opt sweep)
+        return constrain(out, "batch", None, None) if s > 1 else out
+
+    r = flat(xr, p["wr"]).reshape(b, s, num_heads, hd).transpose(0, 2, 1, 3)
+    k = flat(xk, p["wk"]).reshape(b, s, num_heads, hd).transpose(0, 2, 1, 3)
+    v = flat(xv, p["wv"]).reshape(b, s, num_heads, hd).transpose(0, 2, 1, 3)
+    w_flat = _decay(p, xw)
+    if s > 1:
+        w_flat = constrain(w_flat, "batch", None, None)
+    w = w_flat.reshape(b, s, num_heads, hd).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(xg @ p["wg"])
+
+    if s == 1:
+        # single-token decode: exact one-step recurrence, no kernel needed
+        rt, kt, vt, wt = (t[:, :, 0] for t in (r, k, v, w))
+        u = p["bonus"].astype(jnp.float32)[None]
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.sum((wkv_state + u[..., None] * kv)
+                    * rt[..., :, None].astype(jnp.float32), axis=-2)
+        new_wkv = wt[..., :, None].astype(jnp.float32) * wkv_state + kv
+        y = y[:, :, None, :]
+    else:
+        y, new_wkv = wkv6(r, k, v, w, p["bonus"], backend=backend,
+                          chunk=chunk)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, d).astype(x.dtype)
+    out = (y * g) @ p["wo"]
+    return out, (new_last, new_wkv)
+
+
+def channel_mix(p, x, last):
+    """Squared-ReLU channel mix. Returns (out, new_last)."""
+    prev, new_last = _token_shift(x, last)
+    mu = p["mu_cm"].astype(x.dtype)
+    xr = x + (prev.astype(x.dtype) - x) * mu[0]
+    xk = x + (prev.astype(x.dtype) - x) * mu[1]
+    rcv = jax.nn.sigmoid(xr @ p["cm_wr"])
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    return rcv * (kk @ p["cm_wv"]), new_last
+
+
+def init_rwkv_state(batch: int, d_model: int, num_heads: int):
+    hd = d_model // num_heads
+    return {
+        "tm_last": jnp.zeros((batch, d_model), jnp.float32),
+        "cm_last": jnp.zeros((batch, d_model), jnp.float32),
+        "wkv": jnp.zeros((batch, num_heads, hd, hd), jnp.float32),
+    }

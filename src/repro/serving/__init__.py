@@ -1,0 +1,4 @@
+from repro.serving.simulator import (  # noqa: F401
+    EdgeCloudRuntime,
+    serve_stream,
+)

@@ -1,0 +1,180 @@
+"""Edge/cloud split-computing runtime (the paper's Figure 1, executable).
+
+Two separately-jitted device functions model the two halves of the split:
+
+  edge_fn(params, tokens, depth)  — embeds + layers 1..depth + the exit at
+      `depth` (fused confidence). Runs with a *dynamic* depth via
+      ``lax.fori_loop`` so one compilation serves every splitting layer —
+      exactly the paper's observation that each transformer layer reuses
+      the same hardware module.
+  cloud_fn(params, hidden, depth) — layers depth+1..L + final head.
+
+The offload payload between them is the layer-`depth` activation
+(B, S, D) — its byte size is metered per sample and is what the paper's
+`o` abstracts (and what the pod-axis transfer realizes in the multi-pod
+mapping).
+
+SplitEE-S additionally reads the exits *below* depth; the runtime exposes
+``edge_fn_s`` returning the full (depth-masked) confidence vector.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.controller import SplitEEController
+from repro.core.rewards import CostModel
+from repro.kernels.exit_confidence.ops import exit_confidence
+from repro.models.common import apply_norm
+from repro.models.transformer import (_exit_w, _layer_full, _positions,
+                                      embed_inputs, pool_hidden)
+
+
+@dataclasses.dataclass
+class EdgeCloudRuntime:
+    cfg: ModelConfig
+    backend: str = "ref"
+
+    def __post_init__(self):
+        cfg = self.cfg
+        backend = self.backend
+
+        def run_layers(params, x, positions, start, stop):
+            def body(i, xx):
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+                xx, _ = _layer_full(cfg, params, lp, xx, positions, i,
+                                    window=0, backend=backend)
+                return xx
+            return jax.lax.fori_loop(start, stop, body, x)
+
+        def exit_at(params, x, depth):
+            """Exit observables at 1-indexed layer = depth (0-idx arm)."""
+            lp = jax.tree.map(lambda a: a[depth], params["layers"])
+            hn = apply_norm(x, lp["exit_norm"], cfg.norm)
+            pooled = pool_hidden(cfg, hn)
+            w = _exit_w(params, lp)
+            return exit_confidence(pooled, w)
+
+        @jax.jit
+        def edge_fn(params, batch, depth):
+            """Layers 1..depth+1 (depth is the 0-indexed arm)."""
+            x = embed_inputs(params, cfg, batch)
+            b, s, _ = x.shape
+            pos = _positions(cfg, b, s)
+            x = run_layers(params, x, pos, 0, depth + 1)
+            conf, pred = exit_at(params, x, depth)
+            return conf, pred, x
+
+        @jax.jit
+        def cloud_fn(params, hidden, depth):
+            b, s, _ = hidden.shape
+            pos = _positions(cfg, b, s)
+            x = run_layers(params, hidden, pos, depth + 1, cfg.num_layers)
+            lp_last = jax.tree.map(lambda a: a[-1], params["layers"])
+            xf = apply_norm(x, params["final_norm"], cfg.norm)
+            pooled = pool_hidden(cfg, xf)
+            w = _exit_w(params, lp_last)
+            return exit_confidence(pooled, w)
+
+        @jax.jit
+        def edge_fn_s(params, batch, depth):
+            """SplitEE-S edge pass: confidences of ALL exits <= depth.
+            (Simulated with a full scan + mask — the *cost model* still
+            charges only depth layers; see core.rewards.)"""
+            x = embed_inputs(params, cfg, batch)
+            b, s, _ = x.shape
+            pos = _positions(cfg, b, s)
+
+            def body(carry, inp):
+                xx = carry
+                lp, i = inp
+                xx2, _ = _layer_full(cfg, params, lp, xx, pos, i,
+                                     window=0, backend=backend)
+                xx = jnp.where(i <= depth, xx2, xx)
+                pooled = pool_hidden(
+                    cfg, apply_norm(xx, lp["exit_norm"], cfg.norm))
+                return xx, pooled
+
+            idx = jnp.arange(cfg.num_layers)
+            x, pooled = jax.lax.scan(body, x, (params["layers"], idx))
+            l, bb, d = pooled.shape
+            if cfg.exits.share_head or not cfg.exits.enabled:
+                conf, pred = exit_confidence(pooled.reshape(l * bb, d),
+                                             params["exit_w"])
+            else:
+                conf, pred = jax.vmap(exit_confidence)(
+                    pooled, params["layers"]["exit_w"])
+                conf, pred = conf.reshape(l * bb), pred.reshape(l * bb)
+            x_at_depth = None  # S-variant offloads from `depth` too
+            return conf.reshape(l, bb), pred.reshape(l, bb), x
+
+        self.edge_fn = edge_fn
+        self.cloud_fn = cloud_fn
+        self.edge_fn_s = edge_fn_s
+
+    def offload_bytes(self, batch_size: int, seq_len: int) -> int:
+        return batch_size * seq_len * self.cfg.d_model \
+            * jnp.dtype(self.cfg.dtype).itemsize
+
+
+def serve_stream(runtime: EdgeCloudRuntime, params, stream, cost: CostModel,
+                 *, side_info: bool = False, beta: float = 1.0,
+                 max_samples: int = 0,
+                 labels_for_accounting: bool = True) -> Dict[str, Any]:
+    """Stream samples through the online SplitEE controller + edge/cloud
+    runtime. Unsupervised: labels (if present) are used only for reporting.
+    """
+    cfg = runtime.cfg
+    ctl = SplitEEController(cost, beta=beta, side_info=side_info)
+    correct, preds = [], []
+    n = 0
+    for sample in stream:
+        tokens = jnp.asarray(sample["tokens"])[None, :]
+        batch = {"tokens": tokens}
+        arm = ctl.choose_split()
+        if side_info:
+            conf_all, pred_all, hidden = runtime.edge_fn_s(
+                params, batch, jnp.int32(arm))
+            conf_path = np.asarray(conf_all[: arm + 1, 0])
+            pred_i = int(pred_all[arm, 0])
+        else:
+            conf, pred_v, hidden = runtime.edge_fn(params, batch,
+                                                   jnp.int32(arm))
+            conf_path = np.asarray(conf)
+            pred_i = int(pred_v[0])
+        conf_i = float(conf_path[-1])
+        will_exit = (conf_i >= cost.alpha) or (arm + 1 == cost.num_layers)
+        conf_L = None
+        if not will_exit:
+            conf_L_v, pred_L = runtime.cloud_fn(params, hidden,
+                                                jnp.int32(arm))
+            conf_L = float(conf_L_v[0])
+            pred_i = int(pred_L[0])
+        ob = runtime.offload_bytes(1, tokens.shape[1])
+        ctl.update(arm, conf_path, conf_L,
+                   offload_bytes=0 if will_exit else ob)
+        preds.append(pred_i)
+        if labels_for_accounting and "labels" in sample:
+            correct.append(int(pred_i == int(sample["labels"])))
+        n += 1
+        if max_samples and n >= max_samples:
+            break
+    hist = {k: np.asarray(v) for k, v in ctl.history.items()}
+    out = {
+        "n": n,
+        "preds": np.asarray(preds),
+        "cost_total": float(hist["cost"].sum()),
+        "offload_frac": float(1.0 - hist["exited"].mean()),
+        "offload_bytes": int(hist["offload_bytes"].sum()),
+        "arms": hist["arm"],
+        "rewards": hist["reward"],
+    }
+    if correct:
+        out["accuracy"] = float(np.mean(correct))
+    return out

@@ -1,0 +1,7 @@
+from repro.sharding.rules import (  # noqa: F401
+    constrain,
+    mesh_rules,
+    param_specs,
+    current_mesh,
+    logical_to_spec,
+)

@@ -1,0 +1,140 @@
+"""Logical-axis sharding rules.
+
+Model code annotates activations with *logical* axes via
+``constrain(x, "batch", None, "model")``; the launch layer binds a mesh and
+an axis map (``mesh_rules``) that translates logical names to mesh axes.
+Outside any binding, ``constrain`` is the identity — smoke tests and CPU
+benches never touch device state.
+
+Parameter sharding is assigned by leaf path (``param_specs``): the Megatron
+mapping — column-parallel in-projections, row-parallel out-projections,
+vocab-sharded embedding/exit-head, expert FFN inner dim sharded over
+"model" (tensor-parallel experts; see DESIGN.md).
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _axis_map() -> Optional[dict]:
+    return getattr(_state, "axis_map", None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def mesh_rules(mesh: Mesh, axis_map: dict):
+    """axis_map: logical name -> mesh axis (str or tuple), e.g.
+    {"batch": ("pod", "data"), "model": "model"}."""
+    prev = (current_mesh(), _axis_map())
+    _state.mesh, _state.axis_map = mesh, axis_map
+    try:
+        yield
+    finally:
+        _state.mesh, _state.axis_map = prev
+
+
+def logical_to_spec(*logical) -> P:
+    amap = _axis_map() or {}
+    return P(*[amap.get(a) if a is not None else None for a in logical])
+
+
+def constrain(x, *logical):
+    """with_sharding_constraint by logical axis names (identity if unbound)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(*logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ------------------------------------------------------------- param specs
+
+# (path regex, logical spec). Later entries win. Logical axes: "model"
+# (tensor-parallel) and "fsdp" (weights additionally sharded over the data
+# axis, ZeRO/FSDP-style — gathered per layer at use; required to fit the
+# >100B assigned archs in 16 GB/chip). Stacked layer params carry a leading
+# layer axis -> specs are right-aligned.
+_RULES = [
+    (r"embed$", ("model", "fsdp")),                     # (V, D) vocab-sharded
+    (r"(wq|wk|wv|wi|wg|w_in|cm_wk|wr)$", ("fsdp", "model")),
+    (r"(wo|wv_out|cm_wv|w_out)$", ("model", "fsdp")),
+    (r"exit_w$", ("fsdp", "model")),                    # (D, V)
+    (r"router$", (None, None)),
+    (r"moe/wi$|moe/wg$", (None, "fsdp", "model")),      # (E, D, F)
+    (r"moe/wo$", (None, "model", "fsdp")),              # (E, F, D)
+]
+
+
+def _spec_for(path: str, ndim: int) -> P:
+    matched = None
+    for pat, spec in _RULES:
+        if re.search(pat, path):
+            matched = spec
+    if matched is None:
+        return P()
+    spec = list(matched)
+    # right-align: stacked layer axes (leading) stay unsharded
+    if ndim < len(spec):
+        spec = spec[-ndim:] if ndim else []
+    pad = [None] * (ndim - len(spec))
+    return P(*pad, *spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params, axis_map: Optional[dict] = None,
+                fsdp_paths: Optional[str] = None):
+    """PartitionSpec pytree for a (possibly abstract) param tree.
+
+    ``axis_map`` translates logical axes ("model"/"fsdp") to mesh axes;
+    default keeps "model" and maps "fsdp" to "data".
+
+    ``fsdp_paths``: optional regex — "fsdp" is kept only on leaves whose
+    path matches; elsewhere it maps to None (replicated over data). Used
+    by the decode/serving path, where FSDP weight-gathers per step are the
+    dominant collective cost (§Perf it.1) but expert stacks must stay
+    data-sharded to fit HBM."""
+    amap = axis_map or {"model": "model", "fsdp": "data"}
+    fsdp_re = re.compile(fsdp_paths) if fsdp_paths else None
+
+    def translate(spec: P, path: str) -> P:
+        out = []
+        for a in spec:
+            if a == "fsdp" and fsdp_re is not None \
+                    and not fsdp_re.search(path):
+                out.append(None)
+                continue
+            out.append(amap.get(a, a) if isinstance(a, str) else a)
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: translate(
+            _spec_for(_path_str(path), leaf.ndim), _path_str(path)),
+        params)
+
+
+def named_shardings(mesh: Mesh, params):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params),
+                        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,45 @@
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see ONE device.
+# Only launch/dryrun.py forces the 512-device placeholder topology.
+# Lock the single-device backend NOW, before any test module import can
+# side-effect XLA_FLAGS (test_dryrun_unit imports launch.dryrun):
+assert len(jax.devices()) >= 1
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, b=2, s=16, seed=0, with_labels=True):
+    """Random batch matching a ModelConfig's modality."""
+    import jax.numpy as jnp
+    key = jax.random.PRNGKey(seed)
+    batch = {}
+    if cfg.modality == "vision_stub":
+        batch["embeds"] = jax.random.normal(key, (b, s, cfg.d_model),
+                                            jnp.float32)
+    elif cfg.modality == "audio_stub":
+        batch["frames"] = jax.random.normal(
+            key, (b, cfg.encoder.source_len, cfg.encoder.d_model),
+            jnp.float32)
+        batch["tokens"] = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    else:
+        batch["tokens"] = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    if with_labels:
+        if cfg.num_classes:
+            batch["labels"] = jax.random.randint(key, (b,), 0,
+                                                 cfg.num_classes)
+        else:
+            batch["labels"] = jax.random.randint(key, (b, s), 0,
+                                                 cfg.vocab_size)
+    return batch
+
+
+def f32_cfg(cfg):
+    return dataclasses.replace(cfg, dtype="float32")

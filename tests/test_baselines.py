@@ -1,0 +1,55 @@
+"""Baseline policies (paper §5.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CostModel, confidence_cascade, deebert_cascade,
+                        final_exit, random_exit)
+
+L = 12
+COST = CostModel(num_layers=L, alpha=0.7)
+
+
+def _stream(n=500, seed=0):
+    rng = np.random.default_rng(seed)
+    conf = np.sort(rng.uniform(0.1, 0.99, (n, L)), axis=1)
+    correct = rng.random((n, L)) < np.linspace(0.6, 0.9, L)[None]
+    return jnp.asarray(conf), jnp.asarray(correct)
+
+
+def test_final_exit_constant_cost():
+    conf, correct = _stream()
+    acc, cost = final_exit(conf, correct, COST)
+    assert np.allclose(np.asarray(cost), COST.lam * L)
+    assert abs(float(acc.mean())
+               - float(correct[:, -1].mean())) < 1e-6
+
+
+def test_cascade_exits_at_first_clearing_layer():
+    conf = jnp.asarray([[0.1, 0.8, 0.9] + [0.95] * 9,
+                        [0.1] * 11 + [0.2]])
+    correct = jnp.ones_like(conf, dtype=bool)
+    acc, cost = confidence_cascade(conf, correct, COST)
+    assert float(cost[0]) == COST.lam * 2       # exits at layer 2
+    assert float(cost[1]) == COST.lam * L       # never clears -> final
+
+
+def test_cascade_cost_leq_final():
+    conf, correct = _stream()
+    _, cost = confidence_cascade(conf, correct, COST)
+    assert (np.asarray(cost) <= COST.lam * L + 1e-6).all()
+
+
+def test_random_exit_cost_in_range():
+    conf, correct = _stream()
+    acc, cost = random_exit(conf, correct, COST, jax.random.PRNGKey(0))
+    c = np.asarray(cost)
+    assert c.min() >= COST.lam1 * 1 + COST.lam2 - 1e-6
+    assert c.max() <= COST.lam1 * L + COST.lam2 + COST.offload + 1e-6
+
+
+def test_deebert_worse_than_elasticbert_cascade():
+    conf, correct = _stream(n=4000)
+    acc_e, _ = confidence_cascade(conf, correct, COST)
+    acc_d, _ = deebert_cascade(conf, correct, COST, jax.random.PRNGKey(1))
+    assert float(acc_d.mean()) <= float(acc_e.mean()) + 0.02

@@ -1,0 +1,106 @@
+"""Substrate tests: synthetic data, profiles, optimizer, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.data import DOMAINS, make_dataset
+from repro.data.profiles import PROFILE_DATASETS, simulate_exit_profiles
+from repro.data.stream import OnlineStream, batch_iterator
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.adamw import AdamWConfig
+from repro.optim.schedules import cosine_schedule
+
+
+def test_dataset_shapes_and_labels():
+    d = make_dataset("imdb_like", 500, seed=0)
+    assert d["tokens"].shape == (500, 64)
+    assert set(np.unique(d["labels"])) <= {0, 1}
+    assert d["tokens"][:, 0].max() == 1  # CLS token
+
+def test_dataset_three_class():
+    d = make_dataset("snli_like", 300)
+    assert set(np.unique(d["labels"])) <= {0, 1, 2}
+
+
+def test_dataset_difficulty_mix():
+    d = make_dataset("yelp_like", 2000, seed=1)
+    frac_hard = d["difficulty"].mean()
+    assert 0.2 < frac_hard < 0.6
+
+
+def test_stream_reshuffles_deterministically():
+    d = make_dataset("imdb_like", 100)
+    s1 = OnlineStream(d, seed=3)
+    s2 = OnlineStream(d, seed=3)
+    assert (s1.order == s2.order).all()
+    s3 = OnlineStream(d, seed=4)
+    assert not (s1.order == s3.order).all()
+
+
+def test_batch_iterator_covers_epoch():
+    d = make_dataset("imdb_like", 100)
+    seen = 0
+    for b in batch_iterator(d, 32, epochs=1):
+        seen += len(b["labels"])
+    assert seen == 96  # drop remainder
+
+
+def test_profiles_structure():
+    for name, spec in PROFILE_DATASETS.items():
+        prof = simulate_exit_profiles(spec, subsample=2000)
+        conf, correct = prof["conf"], prof["correct"]
+        assert conf.shape == correct.shape == (2000, 12)
+        assert (conf > 0).all() and (conf <= 1).all()
+        # accuracy grows with depth on average (ex final overthinking dip)
+        acc = correct.mean(0)
+        assert acc[-2] > acc[0] + 0.05, name
+
+
+def test_adamw_minimizes_quadratic():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    for _ in range(200):
+        g = {"w": 2 * (params["w"] - target)}
+        params, opt, _ = adamw_update(params, g, opt, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.1, 10.0))
+def test_clip_by_global_norm(max_norm):
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((2, 2), -4.0)}
+    clipped, gnorm = clip_by_global_norm(g, max_norm)
+    total = float(jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree.leaves(clipped))))
+    assert total <= max_norm * 1.001 or total <= float(gnorm) * 1.001
+
+
+def test_cosine_schedule_endpoints():
+    assert float(cosine_schedule(0, 100, warmup_steps=10)) < 0.2
+    mid = float(cosine_schedule(55, 100, warmup_steps=10))
+    end = float(cosine_schedule(100, 100, warmup_steps=10))
+    assert end < mid <= 1.0
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    save_pytree(str(tmp_path / "ckpt"), tree)
+    loaded = load_pytree(str(tmp_path / "ckpt"), tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    tree = {"a": jnp.zeros((2, 3))}
+    save_pytree(str(tmp_path / "ckpt"), tree)
+    with pytest.raises(ValueError):
+        load_pytree(str(tmp_path / "ckpt"), {"a": jnp.zeros((3, 3))})

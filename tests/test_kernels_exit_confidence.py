@@ -1,0 +1,57 @@
+"""Kernel sweep: fused exit-confidence vs pure-jnp oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.exit_confidence.ops import exit_confidence
+from repro.kernels.exit_confidence.ref import exit_confidence_ref
+
+SHAPES = [
+    (1, 32, 64), (4, 64, 100), (8, 128, 512), (3, 96, 1000),
+    (128, 256, 2049), (16, 257, 777),
+]
+
+
+@pytest.mark.parametrize("b,d,v", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matches_oracle(b, d, v, dtype):
+    key = jax.random.PRNGKey(b * 1000 + d + v)
+    h = jax.random.normal(key, (b, d), jnp.float32).astype(dtype)
+    w = (jax.random.normal(jax.random.fold_in(key, 1), (d, v), jnp.float32)
+         * 0.1).astype(dtype)
+    c0, p0 = exit_confidence(h, w, backend="ref")
+    c1, p1 = exit_confidence(h, w, backend="pallas_interpret",
+                             block_b=64, block_v=256)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(c0), np.asarray(c1),
+                               rtol=tol, atol=tol)
+    # bf16 ties can legitimately disagree on argmax; require agreement
+    # wherever the two top logits are distinguishable
+    if dtype == jnp.float32:
+        assert (np.asarray(p0) == np.asarray(p1)).all()
+
+
+def test_bias_folding():
+    key = jax.random.PRNGKey(7)
+    h = jax.random.normal(key, (4, 32))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (32, 65)) * 0.2
+    bias = jax.random.normal(jax.random.fold_in(key, 2), (65,))
+    c0, p0 = exit_confidence(h, w, bias, backend="ref")
+    c1, p1 = exit_confidence(h, w, bias, backend="pallas_interpret",
+                             block_v=32)
+    np.testing.assert_allclose(np.asarray(c0), np.asarray(c1), rtol=2e-5,
+                               atol=2e-6)
+    assert (np.asarray(p0) == np.asarray(p1)).all()
+
+
+def test_confidence_is_max_softmax_prob():
+    key = jax.random.PRNGKey(3)
+    h = jax.random.normal(key, (8, 16))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (16, 33))
+    conf, pred = exit_confidence_ref(h, w)
+    probs = jax.nn.softmax(h @ w, axis=-1)
+    np.testing.assert_allclose(np.asarray(conf),
+                               np.asarray(jnp.max(probs, -1)), rtol=1e-5)
+    assert (np.asarray(pred) == np.asarray(jnp.argmax(probs, -1))).all()
+    assert (np.asarray(conf) > 0).all() and (np.asarray(conf) <= 1).all()

@@ -1,0 +1,137 @@
+"""SplitEE/SplitEE-S bandit: unit + hypothesis property tests + regret."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CostModel, cumulative_regret, init_state,
+                        per_sample_rewards, run_many, run_stream,
+                        bandit_step, oracle_arm)
+
+L = 12
+COST = CostModel(num_layers=L, alpha=0.7, mu=0.1, offload=5.0)
+
+
+def synthetic_conf(n=4000, seed=0, best_layer=5):
+    """Confidences that make `best_layer` the clear oracle arm."""
+    rng = np.random.default_rng(seed)
+    depth = np.arange(1, L + 1) / L
+    base = 1 / (1 + np.exp(-8 * (depth - best_layer / L)))
+    conf = np.clip(base[None] + rng.normal(0, 0.1, (n, L)), 0.05, 0.99)
+    return jnp.asarray(np.sort(conf, axis=1))  # monotone per-sample
+
+
+def test_round_robin_initialization():
+    conf = synthetic_conf(n=100)
+    out = run_stream(conf, cost=COST)
+    arms = np.asarray(out["arm"][:L])
+    assert sorted(arms.tolist()) == list(range(L))
+
+
+def test_counts_sum_to_t():
+    conf = synthetic_conf(n=500)
+    state = init_state(L)
+    for i in range(50):
+        state, _ = bandit_step(state, conf[i], cost=COST)
+    assert int(state.t) == 50
+    assert float(jnp.sum(state.n)) == 50.0
+
+
+def test_side_info_updates_all_arms_below():
+    conf = synthetic_conf(n=500)
+    state = init_state(L)
+    for i in range(40):
+        state, info = bandit_step(state, conf[i], cost=COST,
+                                  side_info=True)
+    # every arm must have been updated at least as often as in plain UCB
+    assert float(jnp.sum(state.n)) >= 40.0
+    assert int(state.t) == 40
+
+
+def test_converges_to_oracle_arm():
+    conf = synthetic_conf(n=6000, best_layer=6)
+    best, mean_r = oracle_arm(COST, conf, side_info=False)
+    out = run_stream(conf, cost=COST)
+    tail = np.asarray(out["arm"][-1000:])
+    frac_best = (tail == best).mean()
+    assert frac_best > 0.7, (best, frac_best, np.asarray(mean_r))
+
+
+def test_regret_sublinear():
+    conf = synthetic_conf(n=8000, best_layer=6)
+    out = run_stream(conf, cost=COST)
+    reg = np.asarray(cumulative_regret(conf, out["arm"], COST,
+                                       side_info=False))
+    # average regret must decay markedly (sub-linear growth)
+    assert reg[-1] / len(reg) < 0.25 * reg[len(reg) // 10] / (len(reg) // 10)
+
+
+def test_side_info_regret_not_worse():
+    conf = synthetic_conf(n=6000, best_layer=6)
+    o1 = run_stream(conf, cost=COST, side_info=False)
+    o2 = run_stream(conf, cost=COST, side_info=True)
+    r1 = np.asarray(cumulative_regret(conf, o1["arm"], COST,
+                                      side_info=False))[-1]
+    r2 = np.asarray(cumulative_regret(conf, o2["arm"], COST,
+                                      side_info=True))[-1]
+    assert r2 <= r1 * 1.1, (r1, r2)
+
+
+def test_run_many_shapes():
+    conf = synthetic_conf(n=300)
+    out = run_many(conf, jax.random.PRNGKey(0), cost=COST, num_runs=5)
+    assert out["arm"].shape == (5, 300)
+    assert out["perm"].shape == (5, 300)
+    # permutations are permutations
+    for p in np.asarray(out["perm"]):
+        assert sorted(p.tolist()) == list(range(300))
+
+
+# ------------------------------------------------------------- properties
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.05, 0.99), st.floats(0.05, 0.99),
+       st.integers(1, L), st.floats(0.0, 5.0))
+def test_reward_definition(conf_i, conf_l, layer, o):
+    cost = dataclasses.replace(COST, offload=o)
+    r, exits = cost.reward(jnp.float32(layer), jnp.float32(conf_i),
+                           jnp.float32(conf_l), side_info=False)
+    g = cost.lam1 * layer + cost.lam2
+    if conf_i >= cost.alpha or layer == L:
+        assert bool(exits)
+        np.testing.assert_allclose(float(r), conf_i - cost.mu * g,
+                                   rtol=1e-5, atol=1e-6)
+    else:
+        assert not bool(exits)
+        np.testing.assert_allclose(float(r), conf_l - cost.mu * (g + o),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_q_values_bounded(seed):
+    """Q is an average of rewards, each bounded by [-mu*(gamma_L+o), 1]."""
+    rng = np.random.default_rng(seed)
+    conf = jnp.asarray(rng.uniform(0.05, 0.99, (200, L)))
+    out = run_stream(conf, cost=COST)
+    r = np.asarray(out["reward"])
+    lo = -COST.mu * (COST.lam * L + COST.offload)
+    assert (r <= 1.0 + 1e-6).all() and (r >= lo - 1e-6).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_gamma_monotone_and_regret_nonneg(seed):
+    rng = np.random.default_rng(seed)
+    layers = jnp.arange(1, L + 1)
+    g = COST.gamma(layers, side_info=True)
+    assert (np.diff(np.asarray(g)) > 0).all()
+    conf = jnp.asarray(rng.uniform(0.05, 0.99, (300, L)))
+    out = run_stream(conf, cost=COST)
+    reg = np.asarray(cumulative_regret(conf, out["arm"], COST,
+                                       side_info=False))
+    # instantaneous regret >= 0 (tolerance: f32 cumsum cancellation)
+    assert (np.diff(reg) >= -1e-4).all()

@@ -1,0 +1,80 @@
+"""Sharding rules: param spec assignment, sanitation, logical constraints."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.models.api import build_model
+from repro.sharding.rules import constrain, param_specs, _spec_for
+
+
+def test_constrain_is_identity_without_mesh():
+    x = jnp.ones((4, 4))
+    y = constrain(x, "batch", "model")
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_spec_for_rules():
+    assert _spec_for("layers/attn/wq", 2) == P("fsdp", "model")
+    assert _spec_for("layers/attn/wo", 2) == P("model", "fsdp")
+    assert _spec_for("embed", 2) == P("model", "fsdp")
+    assert _spec_for("layers/moe/wi", 3) == P(None, "fsdp", "model")
+    assert _spec_for("layers/moe/wo", 3) == P(None, "model", "fsdp")
+    assert _spec_for("layers/ln1/scale", 1) == P()
+    # stacked (leading layer axis) right-alignment
+    assert _spec_for("layers/attn/wq", 3) == P(None, "fsdp", "model")
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "mixtral-8x22b",
+                                  "rwkv6-3b", "seamless-m4t-large-v2"])
+def test_param_specs_cover_tree(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    abstract = model.abstract_params()
+    specs = param_specs(abstract)
+    leaves_p = jax.tree.leaves(abstract)
+    leaves_s = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+    assert len(leaves_p) == len(leaves_s)
+    # every 2D+ projection leaf must be sharded on at least one axis
+    flat = jax.tree_util.tree_flatten_with_path(abstract)[0]
+    flat_s = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda s: isinstance(s, P))[0]
+    n_sharded = sum(
+        1 for (kp, leaf), (_, spec) in zip(flat, flat_s)
+        if leaf.ndim >= 2 and any(a is not None for a in spec))
+    assert n_sharded >= len([l for _, l in flat if l.ndim >= 2]) * 0.5
+
+
+def test_sanitize_nondivisible():
+    from repro.launch.shardings import sanitize_spec
+    import jax as _jax
+    # fabricate a mesh-like shim via the real API on 1 device
+    mesh = _jax.make_mesh((1,), ("model",))
+    s = sanitize_spec(mesh, P("model", None), (7, 3))
+    assert s == P("model", None)  # 7 % 1 == 0
+
+
+def test_fsdp_paths_filter():
+    """Decode serving path: fsdp kept only on matching leaves (§Perf it.1)."""
+    cfg = get_smoke_config("mixtral-8x22b")
+    abstract = build_model(cfg).abstract_params()
+    specs = param_specs(abstract, fsdp_paths=r"moe/")
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda s: isinstance(s, P))[0]
+    for kp, spec in flat:
+        path = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in kp)
+        if "moe/" in path and path.endswith(("wi", "wg", "wo")):
+            assert "data" in tuple(spec), (path, spec)
+        elif "attn" in path and path.endswith("wq"):
+            assert "data" not in tuple(spec), (path, spec)
+
+
+def test_mesh_dp_tp_factorization():
+    """Per-arch mesh re-split keeps 256 chips/pod (§Perf it.3)."""
+    from repro.launch.mesh import make_production_mesh
+    import pytest as _pytest
+    with _pytest.raises(AssertionError):
+        make_production_mesh(dp=10, tp=10)  # 100 != 256 chips

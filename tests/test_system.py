@@ -1,0 +1,94 @@
+"""End-to-end system tests: the paper's full pipeline on a small testbed.
+
+Stage ii (supervised multi-exit fine-tune on the calibration domain) ->
+stage iii (unsupervised online SplitEE on the shifted evaluation domain),
+asserting the paper's qualitative claims hold on the synthetic testbed:
+cost reduction vs final-exit at bounded accuracy drop, and sub-linear
+regret.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (CostModel, calibrate_alpha, cumulative_regret,
+                        final_exit, run_stream)
+from repro.data import make_dataset
+from repro.data.synthetic import DOMAINS, VOCAB
+from repro.launch.train import exit_accuracy, train_classifier
+
+
+@pytest.fixture(scope="module")
+def testbed():
+    base = get_smoke_config("elasticbert12")
+    cfg = dataclasses.replace(
+        base, num_layers=4, d_model=96, num_heads=4, num_kv_heads=4,
+        d_ff=384, vocab_size=VOCAB, num_classes=2, dtype="float32")
+    train = make_dataset("sst2_like", 4096, seed=0)
+    params, model, log = train_classifier(cfg, train, steps=150,
+                                          batch_size=64, seed=0)
+    eval_data = make_dataset("imdb_like", 3000, seed=7)
+    conf, pred, correct = exit_accuracy(model, params, eval_data)
+    # alpha calibration data: labeled validation split of the FT domain
+    val = make_dataset("sst2_like", 1024, seed=11)
+    conf_val, _, correct_val = exit_accuracy(model, params, val)
+    return cfg, params, model, log, conf, correct, conf_val, correct_val
+
+
+def test_training_loss_decreases(testbed):
+    log = testbed[3]
+    assert log[-1]["loss"] < 0.5 * log[0]["loss"]
+
+
+def test_deeper_exits_more_accurate(testbed):
+    correct = testbed[5]
+    acc = correct.mean(0)
+    assert acc[-1] >= acc[0] - 0.02           # no catastrophic inversion
+    assert acc[-1] > 0.75                     # model actually learned
+
+
+def test_splitee_cost_reduction_with_bounded_acc_drop(testbed):
+    cfg, _, _, _, conf, correct, conf_val, correct_val = testbed
+    cost = CostModel(num_layers=cfg.num_layers, offload=5.0)
+    alpha = calibrate_alpha(jnp.asarray(conf_val), cost, correct_val)
+    cost = dataclasses.replace(cost, alpha=alpha)
+    out = run_stream(jnp.asarray(conf), cost=cost)
+    arms = np.asarray(out["arm"])
+    exited = np.asarray(out["exited"])
+    acc = np.where(exited,
+                   np.take_along_axis(correct, arms[:, None], 1)[:, 0],
+                   correct[:, -1]).mean()
+    total_cost = float(np.asarray(out["cost"]).sum())
+    fa, fc = final_exit(jnp.asarray(conf), jnp.asarray(correct), cost)
+    final_acc, final_cost = float(fa.mean()), float(fc.sum())
+    assert total_cost < 0.8 * final_cost      # meaningful cost cut
+    assert acc > final_acc - 0.05             # bounded accuracy drop
+
+
+def test_splitee_regret_sublinear_on_real_model(testbed):
+    cfg, conf, correct = testbed[0], testbed[4], testbed[5]
+    cost = CostModel(num_layers=cfg.num_layers, offload=3.0, alpha=0.8)
+    out = run_stream(jnp.asarray(conf), cost=cost)
+    reg = np.asarray(cumulative_regret(jnp.asarray(conf), out["arm"], cost,
+                                       side_info=False))
+    n = len(reg)
+    early_rate = reg[n // 10] / (n // 10)
+    late_rate = reg[-1] / n
+    assert late_rate < early_rate * 0.7
+
+
+def test_splitee_s_saturates_faster(testbed):
+    cfg, conf, correct = testbed[0], testbed[4], testbed[5]
+    cost = CostModel(num_layers=cfg.num_layers, offload=3.0, alpha=0.8)
+    o1 = run_stream(jnp.asarray(conf), cost=cost, side_info=False)
+    o2 = run_stream(jnp.asarray(conf), cost=cost, side_info=True)
+    r1 = np.asarray(cumulative_regret(jnp.asarray(conf), o1["arm"], cost,
+                                      side_info=False))
+    r2 = np.asarray(cumulative_regret(jnp.asarray(conf), o2["arm"], cost,
+                                      side_info=True))
+    # S-variant should accumulate no more regret at the 25% mark
+    q = len(r1) // 4
+    assert r2[q] <= r1[q] * 1.2
