@@ -1,0 +1,104 @@
+"""Serving throughput: per-sample `serve_stream` vs the batched runtime.
+
+Measures end-to-end samples/sec of the online SplitEE pipeline (edge
+launches + bandit + offload-queue cloud launches) on the same stream and
+checkpoint, for micro-batch sizes B in {1, 8, 32}. The per-sample loop
+is dispatch-bound (one jitted launch per sample); the batched runtime
+amortizes dispatch over depth-bucketed launches — the acceptance bar is
+>= 5x samples/sec at B=32 on CPU.
+
+    PYTHONPATH=src:. python benchmarks/serve_throughput.py
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+from repro.configs import get_smoke_config
+from repro.core import CostModel
+from repro.data import OnlineStream, make_dataset
+from repro.data.synthetic import VOCAB
+from repro.launch.train import train_classifier
+from repro.serving import EdgeCloudRuntime, serve_stream, serve_stream_batched
+
+BATCH_SIZES = [8, 32]
+
+
+# Edge-sized testbed: the paper's serving half runs on-device, so the
+# benchmark model is deliberately small (the regime where per-sample
+# dispatch, not matmul flops, bounds the sequential loop).
+SEQ_LEN = 32
+
+
+def build(layers: int, steps: int, seed: int = 0):
+    base = get_smoke_config("elasticbert12")
+    cfg = dataclasses.replace(
+        base, num_layers=layers, d_model=32, num_heads=2, num_kv_heads=2,
+        d_ff=128, vocab_size=VOCAB, num_classes=2, dtype="float32")
+    train = make_dataset("sst2_like", 2048, seed=seed, seq_len=SEQ_LEN)
+    params, _, _ = train_classifier(cfg, train, steps=steps, batch_size=64,
+                                    seed=seed)
+    return cfg, params
+
+
+def timed(fn, *, warmup_fn=None):
+    if warmup_fn is not None:
+        warmup_fn()                     # compile outside the timed region
+    t0 = time.time()
+    out = fn()
+    return out, time.time() - t0
+
+
+def run(samples: int = 512, layers: int = 4, steps: int = 60,
+        side_info: bool = False, print_csv: bool = True):
+    cfg, params = build(layers, steps)
+    rt = EdgeCloudRuntime(cfg)
+    eval_data = make_dataset("imdb_like", max(2 * samples, 1024), seed=2,
+                             seq_len=SEQ_LEN)
+    cost = CostModel(num_layers=cfg.num_layers, alpha=0.75, offload=3.0)
+
+    def stream():
+        return OnlineStream(eval_data, seed=0)
+
+    rows = []
+    out, dt = timed(
+        lambda: serve_stream(rt, params, stream(), cost,
+                             side_info=side_info, max_samples=samples),
+        warmup_fn=lambda: serve_stream(rt, params, stream(), cost,
+                                       side_info=side_info,
+                                       max_samples=2 * layers))
+    base_sps = out["n"] / dt
+    rows.append(("per-sample", 1, base_sps, 1.0))
+
+    for b in BATCH_SIZES:
+        out, dt = timed(
+            lambda: serve_stream_batched(rt, params, stream(), cost,
+                                         side_info=side_info, batch_size=b,
+                                         max_samples=samples),
+            warmup_fn=lambda: serve_stream_batched(
+                rt, params, stream(), cost, side_info=side_info,
+                batch_size=b, max_samples=4 * b))
+        sps = out["n"] / dt
+        rows.append(("batched", b, sps, sps / base_sps))
+
+    if print_csv:
+        for kind, b, sps, speedup in rows:
+            print(f"serve_throughput/{kind}/B={b},{sps:.1f} samples/s,"
+                  f"speedup={speedup:.2f}x")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--side-info", action="store_true")
+    args = ap.parse_args()
+    run(samples=args.samples, layers=args.layers, steps=args.steps,
+        side_info=args.side_info)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,7 +19,8 @@ from repro.core import CostModel, calibrate_alpha, confidence_cascade, final_exi
 from repro.data import OnlineStream, make_dataset
 from repro.launch.serve import build_testbed
 from repro.launch.train import exit_accuracy
-from repro.serving import EdgeCloudRuntime, serve_stream
+from repro.serving import (EdgeCloudRuntime, serve_stream,
+                           serve_stream_batched)
 
 
 def main():
@@ -29,6 +30,9 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--offload", type=float, default=5.0)
     ap.add_argument("--eval-domain", default="imdb_like")
+    ap.add_argument("--batch-size", type=int, default=1,
+                    help=">1 serves micro-batches through the "
+                         "delayed-feedback batched runtime")
     args = ap.parse_args()
 
     cfg, params, model, _, eval_data, (conf_val, correct_val), log = \
@@ -46,8 +50,14 @@ def main():
     results = {}
     for side_info, label in [(False, "SplitEE"), (True, "SplitEE-S")]:
         stream = OnlineStream(eval_data, seed=0)
-        out = serve_stream(runtime, params, stream, cost,
-                           side_info=side_info, max_samples=args.samples)
+        if args.batch_size > 1:
+            out = serve_stream_batched(
+                runtime, params, stream, cost, side_info=side_info,
+                batch_size=args.batch_size, max_samples=args.samples)
+        else:
+            out = serve_stream(runtime, params, stream, cost,
+                               side_info=side_info,
+                               max_samples=args.samples)
         results[label] = out
         arms = np.bincount(out["arms"][-200:],
                            minlength=cfg.num_layers)

@@ -12,11 +12,19 @@ In the simulator both run on the same host; the *offload payload*
 (hidden activation at the split, (B, D) after pooling or (B, S, D) raw)
 is metered in bytes — this is the paper's communication cost `o` made
 concrete, and maps onto the pod-to-pod transfer in the multi-pod dry-run.
+
+Batched serving (serving/batched.py) uses the vectorized entry points:
+``choose_splits`` draws arms for a whole micro-batch from the state
+frozen at the batch boundary (delayed feedback — Algorithm 1 applied
+with updates landing once per batch), and ``update_batch`` computes the
+batch's rewards vectorized then folds them into (q, n) with the exact
+incremental-mean arithmetic of the sequential path, so a batch of size 1
+is bit-identical to per-sample serving.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Sequence
 
 import numpy as np
 
@@ -39,50 +47,109 @@ class SplitEEController:
 
     # numpy mirror of policy.bandit_step for host-side streaming
     def choose_split(self) -> int:
+        return int(self.choose_splits(1)[0])
+
+    def choose_splits(self, batch_size: int) -> np.ndarray:
+        """Delayed-feedback arm selection for a micro-batch of size B.
+
+        Every arm is drawn from the bandit state *frozen at the batch
+        boundary* (the batch's own updates land together afterwards via
+        ``update_batch``). Sample k continues the round-robin sweep while
+        t + k < L; all later samples take the frozen-state UCB argmax —
+        with B = 1 this degenerates to the sequential per-sample policy.
+        """
         L = self.cost.num_layers
         t = int(self.state.t)
-        if t < L:
-            return t % L
-        q, n = np.asarray(self.state.q), np.asarray(self.state.n)
-        ucb = q + self.beta * np.sqrt(np.log(max(t, 1)) / np.maximum(n, 1e-9))
-        return int(np.argmax(ucb))
+        arms = np.empty(batch_size, np.int64)
+        rr = min(max(L - t, 0), batch_size)
+        for k in range(rr):
+            arms[k] = (t + k) % L
+        if rr < batch_size:
+            q, n = np.asarray(self.state.q), np.asarray(self.state.n)
+            ucb = q + self.beta * np.sqrt(
+                np.log(max(t, 1)) / np.maximum(n, 1e-9))
+            arms[rr:] = int(np.argmax(ucb))
+        return arms
+
+    def _reward_matrix(self, conf: np.ndarray, chat: np.ndarray):
+        """Vectorized eq. (1) over a (B, L) padded confidence matrix.
+
+        float64 throughout — elementwise the same IEEE ops as the scalar
+        reward path, so the fold below reproduces per-sample serving
+        bit-for-bit.
+        """
+        L = self.cost.num_layers
+        layers1 = np.arange(1, L + 1, dtype=np.float64)
+        g = self.cost.gamma(layers1, side_info=self.side_info)
+        exit_j = (conf >= self.cost.alpha) | (layers1[None, :] == L)
+        r_exit = conf - self.cost.mu * g[None, :]
+        r_off = chat[:, None] - self.cost.mu * (g[None, :] + self.cost.offload)
+        return np.where(exit_j, r_exit, r_off)
+
+    def update_batch(self, arms: Sequence[int],
+                     conf_paths: Sequence[np.ndarray],
+                     conf_Ls: Sequence[Optional[float]],
+                     offload_bytes: Sequence[int]) -> np.ndarray:
+        """Apply one micro-batch of delayed-feedback updates.
+
+        Rewards for all B samples (and, with side information, all their
+        sub-`arm` exits) are computed as one vectorized (B, L) reduce;
+        the (q, n) fold then replays the incremental-mean update in
+        sample order with the identical arithmetic of the sequential
+        controller. Returns the per-sample exit decisions.
+        """
+        L = self.cost.num_layers
+        B = len(arms)
+        arms = np.asarray(arms, np.int64)
+        conf = np.zeros((B, L), np.float64)
+        conf_i = np.empty(B, np.float64)
+        chat = np.empty(B, np.float64)
+        exited = np.empty(B, bool)
+        for k in range(B):
+            path = np.asarray(conf_paths[k], np.float64).reshape(-1)
+            arm = int(arms[k])
+            conf_i[k] = path[-1]
+            exited[k] = conf_i[k] >= self.cost.alpha or arm + 1 == L
+            chat[k] = conf_i[k] if conf_Ls[k] is None else float(conf_Ls[k])
+            if self.side_info:
+                assert len(path) == arm + 1
+                conf[k, :arm + 1] = path
+            else:
+                conf[k, arm] = conf_i[k]
+        r_all = self._reward_matrix(conf, chat)
+        # per-sample device cost, one vectorized reduce (float32 arithmetic
+        # matching jnp's weak-type promotion in CostModel.sample_cost)
+        g_arm = self.cost.gamma((arms + 1).astype(np.float64),
+                                side_info=self.side_info)
+        c_all = g_arm.astype(np.float32) + np.where(
+            exited, np.float32(0.0), np.float32(self.cost.offload))
+
+        q = np.asarray(self.state.q).copy()
+        n = np.asarray(self.state.n).copy()
+        for k in range(B):
+            arm = int(arms[k])
+            if self.side_info:
+                for j in range(arm + 1):
+                    r = float(r_all[k, j])
+                    n[j] += 1
+                    q[j] += (r - q[j]) / n[j]
+            else:
+                r = float(r_all[k, arm])
+                n[arm] += 1
+                q[arm] += (r - q[arm]) / n[arm]
+            self.history["arm"].append(arm)
+            self.history["exited"].append(bool(exited[k]))
+            self.history["reward"].append(float(r_all[k, arm]))
+            self.history["cost"].append(float(c_all[k]))
+            self.history["offload_bytes"].append(
+                0 if exited[k] else int(offload_bytes[k]))
+        self.state = BanditState(q, n, self.state.t + B)
+        return exited
 
     def update(self, arm: int, conf_path: np.ndarray, conf_L: Optional[float],
                offload_bytes: int = 0):
         """conf_path: confidences observed on-device (length arm+1 for
         SplitEE-S, or just [C_arm] for SplitEE). conf_L: final-layer
         confidence if the sample was offloaded, else None."""
-        L = self.cost.num_layers
-        layer = arm + 1
-        conf_i = float(conf_path[-1])
-        exited = conf_i >= self.cost.alpha or layer == L
-        q = np.asarray(self.state.q).copy()
-        n = np.asarray(self.state.n).copy()
-        chat_L = conf_i if conf_L is None else float(conf_L)
-
-        def reward(j1, cj):  # j1: 1-indexed layer
-            g = self.cost.gamma(j1, side_info=self.side_info)
-            if cj >= self.cost.alpha or j1 == L:
-                return cj - self.cost.mu * g
-            return chat_L - self.cost.mu * (g + self.cost.offload)
-
-        if self.side_info:
-            assert len(conf_path) == layer
-            for j in range(layer):
-                r = reward(j + 1, float(conf_path[j]))
-                n[j] += 1
-                q[j] += (r - q[j]) / n[j]
-            r_arm = reward(layer, conf_i)
-        else:
-            r_arm = reward(layer, conf_i)
-            n[arm] += 1
-            q[arm] += (r_arm - q[arm]) / n[arm]
-
-        self.state = BanditState(q, n, self.state.t + 1)
-        c = self.cost.sample_cost(layer, exited, side_info=self.side_info)
-        self.history["arm"].append(arm)
-        self.history["exited"].append(exited)
-        self.history["reward"].append(float(r_arm))
-        self.history["cost"].append(float(c))
-        self.history["offload_bytes"].append(0 if exited else offload_bytes)
-        return exited
+        return bool(self.update_batch(
+            [arm], [conf_path], [conf_L], [offload_bytes])[0])

@@ -1,3 +1,7 @@
 from repro.data.synthetic import DOMAINS, make_dataset  # noqa: F401
-from repro.data.stream import OnlineStream, batch_iterator  # noqa: F401
+from repro.data.stream import (  # noqa: F401
+    OnlineStream,
+    batch_iterator,
+    microbatches,
+)
 from repro.data.profiles import simulate_exit_profiles, PROFILE_DATASETS  # noqa: F401

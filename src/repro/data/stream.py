@@ -21,6 +21,28 @@ class OnlineStream:
         return self.n
 
 
+def microbatches(stream, batch_size: int, max_samples: int = 0):
+    """Group an iterable of per-sample dicts into lists of <= batch_size.
+
+    The serving runtime's ingest path: pulls from any sample stream
+    (OnlineStream or a generator), emits micro-batches for the vectorized
+    controller. The final partial batch is kept (ragged tail), so exactly
+    ``min(len(stream), max_samples)`` samples are served.
+    """
+    buf = []
+    n = 0
+    for sample in stream:
+        buf.append(sample)
+        n += 1
+        if len(buf) == batch_size:
+            yield buf
+            buf = []
+        if max_samples and n >= max_samples:
+            break
+    if buf:
+        yield buf
+
+
 def batch_iterator(data, batch_size: int, seed: int = 0, *,
                    drop_remainder: bool = True, epochs: int = 1):
     n = len(data["labels"])

@@ -17,7 +17,8 @@ from repro.core import (CostModel, calibrate_alpha, confidence_cascade,
 from repro.data import OnlineStream, make_dataset
 from repro.data.synthetic import DOMAINS, VOCAB
 from repro.launch.train import exit_accuracy, train_classifier
-from repro.serving import EdgeCloudRuntime, serve_stream
+from repro.serving import (EdgeCloudRuntime, serve_stream,
+                           serve_stream_batched)
 
 
 def build_testbed(*, layers: int = 6, steps: int = 300,
@@ -50,6 +51,9 @@ def main():
     ap.add_argument("--offload", type=float, default=5.0)
     ap.add_argument("--side-info", action="store_true")
     ap.add_argument("--eval-domain", default="imdb_like")
+    ap.add_argument("--batch-size", type=int, default=1,
+                    help="micro-batch size B; >1 uses the batched "
+                         "delayed-feedback runtime (serving/batched.py)")
     args = ap.parse_args()
 
     cfg, params, model, _, eval_data, (conf_val, correct_val), log = \
@@ -64,9 +68,18 @@ def main():
 
     runtime = EdgeCloudRuntime(cfg)
     stream = OnlineStream(eval_data, seed=0)
-    out = serve_stream(runtime, params, stream, cost,
-                       side_info=args.side_info, max_samples=args.samples)
+    if args.batch_size > 1:
+        out = serve_stream_batched(runtime, params, stream, cost,
+                                   side_info=args.side_info,
+                                   batch_size=args.batch_size,
+                                   max_samples=args.samples)
+    else:
+        out = serve_stream(runtime, params, stream, cost,
+                           side_info=args.side_info,
+                           max_samples=args.samples)
     variant = "SplitEE-S" if args.side_info else "SplitEE"
+    if args.batch_size > 1:
+        variant += f" (batched B={args.batch_size})"
     print(f"{variant}: n={out['n']} acc={out.get('accuracy', float('nan')):.3f} "
           f"cost={out['cost_total']:.0f}λ offload_frac={out['offload_frac']:.2f} "
           f"offloaded={out['offload_bytes']/1e6:.1f}MB")

@@ -2,3 +2,7 @@ from repro.serving.simulator import (  # noqa: F401
     EdgeCloudRuntime,
     serve_stream,
 )
+from repro.serving.batched import (  # noqa: F401
+    OffloadQueue,
+    serve_stream_batched,
+)

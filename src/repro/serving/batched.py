@@ -1,0 +1,196 @@
+"""Batched edge/cloud serving runtime — the vectorized production path.
+
+`serve_stream` (simulator.py) dispatches one sample per device call: a
+host-side bandit round, an `edge_fn` launch with batch size 1, and an
+immediate `cloud_fn` launch on offload. Throughput is bounded by Python
+dispatch, not hardware — the gap Dynamic Split Computing identifies
+between simulated and deployable split inference.
+
+This module serves the same stream in micro-batches of B samples:
+
+  1. **ingest** — `data.stream.microbatches` groups the sample stream;
+  2. **select** — `SplitEEController.choose_splits` draws all B arms
+     from the bandit state frozen at the batch boundary (delayed
+     feedback: the batch's own updates have not landed yet);
+  3. **edge** — samples are bucketed by chosen depth and each bucket is
+     one `edge_fn`/`edge_fn_s` launch. Buckets are padded to power-of-two
+     row counts so at most log2(B)+1 shapes are ever compiled per
+     function (depth itself is a traced argument — no recompile across
+     depths);
+  4. **cloud** — non-exiting samples land in an `OffloadQueue`; at the
+     batch boundary the queue flushes one batched `cloud_fn` launch per
+     depth bucket (again pow2-padded);
+  5. **update** — `SplitEEController.update_batch` applies the whole
+     batch's rewards as one vectorized reduce.
+
+Semantics: with B = 1 the pipeline is *bit-identical* to `serve_stream`
+(same arms, exits, rewards, costs, offload bytes — the differential test
+pins this). With B > 1 the policy is UCB with feedback delayed by up to
+B-1 rounds, the standard batched-bandit relaxation; the regret penalty
+is additive in B, not multiplicative (Joulani et al., 2013).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.controller import SplitEEController
+from repro.core.rewards import CostModel
+from repro.data.stream import microbatches
+from repro.serving.simulator import EdgeCloudRuntime
+
+
+def _pow2(k: int) -> int:
+    """Smallest power of two >= k (bucket capacity; bounds compilations)."""
+    return 1 << (k - 1).bit_length() if k > 1 else 1
+
+
+def _pad_rows(arr: np.ndarray, cap: int) -> np.ndarray:
+    """Pad the leading axis to `cap` rows by repeating the last row."""
+    k = arr.shape[0]
+    if k == cap:
+        return arr
+    reps = np.repeat(arr[-1:], cap - k, axis=0)
+    return np.concatenate([arr, reps], axis=0)
+
+
+class OffloadQueue:
+    """Accumulates offloaded activations; flushes batched cloud calls.
+
+    Rows live host-side as numpy (one device->host transfer per edge
+    bucket, no per-row device slicing — per-index slices would compile a
+    fresh XLA gather each). `flush()` issues one `cloud_fn` launch per
+    distinct depth with all queued rows stacked (padded to a pow2 row
+    count, so compilations are bounded by log2(B)+1 shapes) and returns
+    ``{slot: (conf_L, pred_L)}`` for the batch's bookkeeping.
+    """
+
+    def __init__(self, runtime: EdgeCloudRuntime, params):
+        self.runtime = runtime
+        self.params = params
+        self.rows: Dict[int, List[np.ndarray]] = {}   # depth -> [(S, D)]
+        self.slots: Dict[int, List[int]] = {}
+
+    def add_rows(self, depth: int, hidden_rows: np.ndarray,
+                 slots: List[int]):
+        """hidden_rows: (k, S, D) host array, one row per queued sample."""
+        self.rows.setdefault(depth, []).extend(hidden_rows)
+        self.slots.setdefault(depth, []).extend(slots)
+
+    def __len__(self):
+        return sum(len(v) for v in self.slots.values())
+
+    def flush(self) -> Dict[int, tuple]:
+        out: Dict[int, tuple] = {}
+        for depth in sorted(self.rows):
+            slots = self.slots[depth]
+            hidden = _pad_rows(np.stack(self.rows[depth]),
+                               _pow2(len(slots)))            # (cap, S, D)
+            conf_L, pred_L = self.runtime.cloud_fn(
+                self.params, jnp.asarray(hidden), jnp.int32(depth))
+            conf_np = np.asarray(conf_L)
+            pred_np = np.asarray(pred_L)
+            for j, slot in enumerate(slots):
+                out[slot] = (float(conf_np[j]), int(pred_np[j]))
+        self.rows.clear()
+        self.slots.clear()
+        return out
+
+
+def serve_stream_batched(runtime: EdgeCloudRuntime, params, stream,
+                         cost: CostModel, *, batch_size: int = 32,
+                         side_info: bool = False, beta: float = 1.0,
+                         max_samples: int = 0,
+                         labels_for_accounting: bool = True,
+                         record_trace: bool = False) -> Dict[str, Any]:
+    """Serve a sample stream through the batched SplitEE pipeline.
+
+    Same contract as `serve_stream`, plus `batch_size` (micro-batch B)
+    and `record_trace` (per-sample observed confidences + final-layer
+    confidences, for the differential test's NumPy replay).
+    """
+    ctl = SplitEEController(cost, beta=beta, side_info=side_info)
+    queue = OffloadQueue(runtime, params)
+    correct, preds = [], []
+    trace: Optional[Dict[str, list]] = (
+        {"conf_path": [], "conf_L": []} if record_trace else None)
+    n = 0
+    for batch in microbatches(stream, batch_size, max_samples):
+        B = len(batch)
+        arms = ctl.choose_splits(B)
+        tokens = np.stack([np.asarray(s["tokens"]) for s in batch])
+        seq_len = tokens.shape[1]
+
+        conf_paths: List[Optional[np.ndarray]] = [None] * B
+        batch_preds = [0] * B
+        # ---- edge: one launch per distinct chosen depth ----------------
+        for arm in np.unique(arms):
+            arm = int(arm)
+            idx = np.nonzero(arms == arm)[0]
+            toks = _pad_rows(tokens[idx], _pow2(len(idx)))
+            jb = {"tokens": jnp.asarray(toks)}
+            if side_info:
+                conf_all, pred_all, hidden = runtime.edge_fn_s(
+                    params, jb, jnp.int32(arm))
+                conf_np = np.asarray(conf_all)                 # (L, cap)
+                pred_np = np.asarray(pred_all)
+                for j, s in enumerate(idx):
+                    conf_paths[s] = conf_np[: arm + 1, j]
+                    batch_preds[s] = int(pred_np[arm, j])
+            else:
+                conf_v, pred_v, hidden = runtime.edge_fn(
+                    params, jb, jnp.int32(arm))
+                conf_np = np.asarray(conf_v)                   # (cap,)
+                pred_np = np.asarray(pred_v)
+                for j, s in enumerate(idx):
+                    conf_paths[s] = conf_np[j:j + 1]
+                    batch_preds[s] = int(pred_np[j])
+            keep_j = [j for j, s in enumerate(idx)
+                      if not (float(conf_paths[s][-1]) >= cost.alpha
+                              or arm + 1 == cost.num_layers)]
+            if keep_j:
+                h_np = np.asarray(hidden)        # one transfer per bucket
+                queue.add_rows(arm, h_np[keep_j],
+                               [int(idx[j]) for j in keep_j])
+
+        # ---- cloud: flush the offload queue in depth buckets -----------
+        cloud = queue.flush()
+        conf_Ls: List[Optional[float]] = [None] * B
+        ob = runtime.offload_bytes(1, seq_len)
+        obs = [0] * B
+        for s, (c_L, p_L) in cloud.items():
+            conf_Ls[s] = c_L
+            batch_preds[s] = p_L
+            obs[s] = ob
+
+        # ---- delayed-feedback batch update -----------------------------
+        ctl.update_batch(arms, conf_paths, conf_Ls, obs)
+
+        preds.extend(batch_preds)
+        if trace is not None:
+            trace["conf_path"].extend(conf_paths)
+            trace["conf_L"].extend(conf_Ls)
+        if labels_for_accounting:
+            for s, sample in enumerate(batch):
+                if "labels" in sample:
+                    correct.append(int(batch_preds[s] == int(sample["labels"])))
+        n += B
+
+    hist = {k: np.asarray(v) for k, v in ctl.history.items()}
+    out = {
+        "n": n,
+        "batch_size": batch_size,
+        "preds": np.asarray(preds),
+        "cost_total": float(hist["cost"].sum()),
+        "offload_frac": float(1.0 - hist["exited"].mean()) if n else 0.0,
+        "offload_bytes": int(hist["offload_bytes"].sum()),
+        "arms": hist["arm"],
+        "rewards": hist["reward"],
+    }
+    if correct:
+        out["accuracy"] = float(np.mean(correct))
+    if trace is not None:
+        out["trace"] = trace
+    return out

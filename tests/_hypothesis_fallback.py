@@ -1,0 +1,68 @@
+"""Tiny vendored stand-in for the `hypothesis` API surface the test suite
+uses (`given`, `settings`, `strategies.floats/integers`).
+
+The real library is optional in this container; when it is absent the
+property tests still run against a deterministic sample of each strategy
+(boundary values first, then seeded-random draws) instead of being
+skipped wholesale. Only what the tests need is implemented.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_FALLBACK_EXAMPLES = 10  # cap per test: boundary cases + random draws
+
+
+class _Strategy:
+    def __init__(self, boundary, sampler):
+        self.boundary = list(boundary)   # always-tried edge cases
+        self.sampler = sampler           # rng -> value
+
+    def example_at(self, i, rng):
+        if i < len(self.boundary):
+            return self.boundary[i]
+        return self.sampler(rng)
+
+
+class strategies:
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(
+            [float(min_value), float(max_value)],
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            [int(min_value), int(max_value)],
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def given(*strats):
+    def deco(fn):
+        # NB: no functools.wraps — pytest must see a zero-arg signature,
+        # not the strategy parameters (it would resolve them as fixtures).
+        def wrapper(*args, **kwargs):
+            rng = np.random.default_rng(0)
+            n = min(getattr(wrapper, "_max_examples", _FALLBACK_EXAMPLES),
+                    _FALLBACK_EXAMPLES)
+            for i in range(n):
+                ex = tuple(s.example_at(i, rng) for s in strats)
+                try:
+                    fn(*args, *ex, **kwargs)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"falsifying example (fallback #{i}): {ex}") from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._is_fallback_property = True
+        return wrapper
+    return deco
+
+
+def settings(max_examples=None, **_ignored):
+    def deco(fn):
+        if max_examples is not None:
+            fn._max_examples = int(max_examples)
+        return fn
+    return deco

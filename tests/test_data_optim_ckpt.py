@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # optional dep: run a vendored mini-fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.checkpoint import load_pytree, save_pytree
 from repro.data import DOMAINS, make_dataset

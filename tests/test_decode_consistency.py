@@ -52,6 +52,7 @@ def test_prefill_then_decode_matches_full_forward(arch):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_ring_buffer_window_cache_matches_full():
     """With window W < S the ring cache must attend to exactly the last W
     positions: compare against full-cache attention restricted by mask."""
@@ -80,6 +81,7 @@ def test_ring_buffer_window_cache_matches_full():
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_rwkv_stepwise_equals_prefill():
     cfg = f32_cfg(get_smoke_config("rwkv6-3b"))
     model = build_model(cfg)

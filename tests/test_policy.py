@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # optional dep: run a vendored mini-fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import (CostModel, cumulative_regret, init_state,
                         per_sample_rewards, run_many, run_stream,

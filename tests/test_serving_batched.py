@@ -1,0 +1,222 @@
+"""Differential tests for the batched edge/cloud serving runtime.
+
+Pins the batched pipeline (serving/batched.py) to its references:
+
+* B = 1  -> bit-identical to the sequential `serve_stream` (arms, exit
+  decisions, rewards, cost totals, offload bytes, predictions);
+* B > 1  -> exact replay by an independent NumPy implementation of the
+  delayed-feedback UCB (arms re-derived from scratch, totals matched);
+* host-side `SplitEEController` vs the jitted `policy.bandit_step`
+  (both side_info modes) agree on q, n, reward, and cost;
+* split consistency: cloud(edge(x, d), d) equals the monolithic
+  final-layer confidence *and* prediction for every depth d.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CostModel, SplitEEController, bandit_step, init_state
+from repro.configs import get_smoke_config
+from repro.data import OnlineStream, make_dataset, microbatches
+from repro.data.synthetic import VOCAB
+from repro.launch.train import train_classifier
+from repro.serving import EdgeCloudRuntime, serve_stream, serve_stream_batched
+from repro.serving.batched import _pad_rows, _pow2
+
+
+@pytest.fixture(scope="module")
+def served():
+    base = get_smoke_config("elasticbert12")
+    cfg = dataclasses.replace(
+        base, num_layers=3, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=256, vocab_size=VOCAB, num_classes=2, dtype="float32")
+    train = make_dataset("sst2_like", 2048, seed=0)
+    params, model, _ = train_classifier(cfg, train, steps=60, batch_size=64)
+    eval_data = make_dataset("imdb_like", 400, seed=2)
+    return cfg, params, model, eval_data
+
+
+# ------------------------------------------------------------ B=1 parity
+
+@pytest.mark.parametrize("side_info", [False, True])
+def test_batched_b1_bit_identical(served, side_info):
+    """Batch size 1 must reproduce the sequential runtime exactly."""
+    cfg, params, _, eval_data = served
+    rt = EdgeCloudRuntime(cfg)
+    cost = CostModel(num_layers=cfg.num_layers, alpha=0.75, offload=3.0)
+    ref = serve_stream(rt, params, OnlineStream(eval_data, seed=0), cost,
+                       side_info=side_info, max_samples=120)
+    got = serve_stream_batched(rt, params, OnlineStream(eval_data, seed=0),
+                               cost, side_info=side_info, batch_size=1,
+                               max_samples=120)
+    assert got["n"] == ref["n"]
+    np.testing.assert_array_equal(got["arms"], ref["arms"])
+    np.testing.assert_array_equal(got["preds"], ref["preds"])
+    # bit-identical, not allclose: same executables, same update arithmetic
+    np.testing.assert_array_equal(got["rewards"], ref["rewards"])
+    assert got["cost_total"] == ref["cost_total"]
+    assert got["offload_bytes"] == ref["offload_bytes"]
+    assert got["offload_frac"] == ref["offload_frac"]
+    assert got.get("accuracy") == ref.get("accuracy")
+
+
+# --------------------------------------------- B>1 NumPy reference replay
+
+def _numpy_delayed_feedback(cost: CostModel, beta, batch_size, conf_paths,
+                            conf_Ls, ob_per_sample, *, side_info):
+    """Independent replay of the delayed-feedback bandit: arms re-derived
+    from a frozen-per-batch UCB state, rewards/costs/offload re-totalled.
+    """
+    L = cost.num_layers
+    q = np.zeros(L, np.float64)
+    n = np.zeros(L, np.float64)
+    t = 0
+    arms, rewards, costs, obs = [], [], [], []
+    N = len(conf_paths)
+    i = 0
+    while i < N:
+        bsz = min(batch_size, N - i)
+        batch_arms = []
+        for k in range(bsz):
+            if t + k < L:
+                batch_arms.append((t + k) % L)
+            else:
+                ucb = q + beta * np.sqrt(
+                    np.log(max(t, 1)) / np.maximum(n, 1e-9))
+                batch_arms.append(int(np.argmax(ucb)))
+        for k in range(bsz):
+            arm = batch_arms[k]
+            path = np.asarray(conf_paths[i + k], np.float64).reshape(-1)
+            conf_i = float(path[-1])
+            exited = conf_i >= cost.alpha or arm + 1 == L
+            chat = conf_i if conf_Ls[i + k] is None else float(conf_Ls[i + k])
+
+            def r_of(j1, cj):
+                g = float(cost.gamma(j1, side_info=side_info))
+                if cj >= cost.alpha or j1 == L:
+                    return cj - cost.mu * g
+                return chat - cost.mu * (g + cost.offload)
+
+            if side_info:
+                assert len(path) == arm + 1
+                for j in range(arm + 1):
+                    r = r_of(j + 1, float(path[j]))
+                    n[j] += 1
+                    q[j] += (r - q[j]) / n[j]
+            else:
+                r = r_of(arm + 1, conf_i)
+                n[arm] += 1
+                q[arm] += (r - q[arm]) / n[arm]
+            arms.append(arm)
+            rewards.append(r_of(arm + 1, conf_i))
+            g = float(cost.gamma(arm + 1, side_info=side_info))
+            costs.append(g + (0.0 if exited else cost.offload))
+            obs.append(0 if exited else ob_per_sample)
+        t += bsz
+        i += bsz
+    return {"arms": np.asarray(arms), "rewards": np.asarray(rewards),
+            "cost_total": float(np.sum(costs)),
+            "offload_bytes": int(np.sum(obs)), "q": q, "n": n}
+
+
+@pytest.mark.parametrize("side_info,batch_size",
+                         [(False, 8), (False, 32), (True, 8)])
+def test_batched_matches_numpy_reference(served, side_info, batch_size):
+    cfg, params, _, eval_data = served
+    rt = EdgeCloudRuntime(cfg)
+    cost = CostModel(num_layers=cfg.num_layers, alpha=0.75, offload=3.0)
+    out = serve_stream_batched(rt, params, OnlineStream(eval_data, seed=0),
+                               cost, side_info=side_info,
+                               batch_size=batch_size, max_samples=200,
+                               record_trace=True)
+    seq_len = eval_data["tokens"].shape[1]
+    ref = _numpy_delayed_feedback(
+        cost, 1.0, batch_size, out["trace"]["conf_path"],
+        out["trace"]["conf_L"], rt.offload_bytes(1, seq_len),
+        side_info=side_info)
+    # the reference *re-derives* the arm sequence from the confidences
+    np.testing.assert_array_equal(out["arms"], ref["arms"])
+    np.testing.assert_allclose(out["rewards"], ref["rewards"],
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(out["cost_total"], ref["cost_total"],
+                               rtol=1e-5)
+    assert out["offload_bytes"] == ref["offload_bytes"]
+
+
+# ------------------------------------- controller vs jitted bandit_step
+
+@pytest.mark.parametrize("side_info", [False, True])
+def test_controller_parity_with_bandit_step(side_info):
+    """Host-side streaming controller == jitted policy.bandit_step on the
+    same random confidence stream: arm choices, exits exact; q, n,
+    reward, cost to float32 tolerance."""
+    L = 6
+    cost = CostModel(num_layers=L, alpha=0.7, offload=4.0)
+    rng = np.random.default_rng(0)
+    conf = rng.uniform(0.05, 0.99, (150, L)).astype(np.float32)
+    state = init_state(L)
+    ctl = SplitEEController(cost, side_info=side_info)
+    for tstep in range(conf.shape[0]):
+        arm = ctl.choose_split()
+        state, info = bandit_step(state, jnp.asarray(conf[tstep]), cost=cost,
+                                  side_info=side_info)
+        assert arm == int(info["arm"]), tstep
+        conf_i = float(conf[tstep, arm])
+        exited = conf_i >= cost.alpha or arm + 1 == L
+        path = conf[tstep, :arm + 1] if side_info \
+            else conf[tstep, arm:arm + 1]
+        conf_L = None if exited else float(conf[tstep, -1])
+        ctl.update(arm, path, conf_L)
+        assert ctl.history["exited"][-1] == bool(info["exited"])
+        np.testing.assert_allclose(ctl.history["reward"][-1],
+                                   float(info["reward"]),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(ctl.history["cost"][-1],
+                                   float(info["cost"]), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ctl.state.n),
+                                  np.asarray(state.n))
+    np.testing.assert_allclose(np.asarray(ctl.state.q),
+                               np.asarray(state.q), rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------ split consistency
+
+def test_split_consistency_all_depths(served):
+    """cloud(edge(x, d), d) == monolithic final layer, conf AND pred."""
+    cfg, params, model, eval_data = served
+    rt = EdgeCloudRuntime(cfg)
+    batch = {"tokens": jnp.asarray(eval_data["tokens"][:8])}
+    full = model.forward_exits(params, batch)
+    conf_full = np.asarray(full["conf"][-1])
+    pred_full = np.asarray(full["pred"][-1])
+    for depth in range(cfg.num_layers):
+        _, _, hidden = rt.edge_fn(params, batch, jnp.int32(depth))
+        conf_l, pred_l = rt.cloud_fn(params, hidden, jnp.int32(depth))
+        np.testing.assert_allclose(np.asarray(conf_l), conf_full,
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_array_equal(np.asarray(pred_l), pred_full)
+
+
+# --------------------------------------------------------- ingest helpers
+
+def test_microbatches_grouping():
+    stream = ({"tokens": np.full(4, i)} for i in range(10))
+    got = list(microbatches(stream, 4))
+    assert [len(b) for b in got] == [4, 4, 2]     # ragged tail kept
+    stream = ({"tokens": np.full(4, i)} for i in range(10))
+    got = list(microbatches(stream, 4, max_samples=6))
+    assert [len(b) for b in got] == [4, 2]
+    assert int(got[-1][-1]["tokens"][0]) == 5
+
+
+def test_pow2_padding_helpers():
+    assert [_pow2(k) for k in (1, 2, 3, 5, 8, 9, 32)] == \
+        [1, 2, 4, 8, 8, 16, 32]
+    arr = np.arange(6).reshape(3, 2)
+    padded = _pad_rows(arr, 4)
+    assert padded.shape == (4, 2)
+    np.testing.assert_array_equal(padded[3], arr[-1])
+    assert _pad_rows(arr, 3) is arr

@@ -20,6 +20,9 @@ from repro.data import make_dataset
 from repro.data.synthetic import DOMAINS, VOCAB
 from repro.launch.train import exit_accuracy, train_classifier
 
+# full-pipeline training fixture: minutes of CPU — excluded from tier-1
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def testbed():
