@@ -1,0 +1,139 @@
+"""Sharded serving throughput: samples/sec vs data-parallel replica count.
+
+Runs the sharded edge/cloud runtime (serving/sharded.py) on the same
+stream and checkpoint at replica counts {1, 2, 4} with the async offload
+queue on and off, plus the single-replica batched runtime as the
+baseline. Reports samples/sec and the speedup over 1 replica, and writes
+a ``BENCH_serve_sharded.json`` artifact (schema in benchmarks/README.md).
+
+On a CPU-only host the script forces
+``--xla_force_host_platform_device_count=4`` (set before jax initializes)
+so a 4-way "data" mesh exists at all. NOTE: forced host devices carve
+the SAME physical cores into 4 XLA clients — they demonstrate the
+sharded execution path, not a hardware speedup. If the measured scaling
+is flat, the artifact's ``host_bottleneck`` note records that the host
+is the bottleneck; the ≥1.5x bar applies on hosts with ≥4 real devices.
+
+    PYTHONPATH=src:. python benchmarks/serve_sharded.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+# must land before jax initializes its backends
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+if "--xla_force_host_platform_device_count" not in os.environ["XLA_FLAGS"]:
+    os.environ["XLA_FLAGS"] += " --xla_force_host_platform_device_count=4"
+
+import jax  # noqa: E402
+
+from repro.core import CostModel  # noqa: E402
+from repro.data import OnlineStream, make_dataset  # noqa: E402
+from repro.serving import (  # noqa: E402
+    EdgeCloudRuntime, serve_stream_batched, serve_stream_sharded)
+
+from serve_throughput import SEQ_LEN, build, timed  # noqa: E402
+
+REPLICA_COUNTS = [1, 2, 4]
+
+
+def run(samples: int = 1024, layers: int = 4, steps: int = 60,
+        batch_size: int = 64, out_path: str = "BENCH_serve_sharded.json"):
+    n_dev = len(jax.devices())
+    cfg, params = build(layers, steps)
+    rt = EdgeCloudRuntime(cfg)
+    eval_data = make_dataset("imdb_like", max(2 * samples, 1024), seed=2,
+                             seq_len=SEQ_LEN)
+    cost = CostModel(num_layers=cfg.num_layers, alpha=0.75, offload=3.0)
+
+    def stream():
+        return OnlineStream(eval_data, seed=0)
+
+    rows = []
+
+    def run_batched():
+        return serve_stream_batched(rt, params, stream(), cost,
+                                    batch_size=batch_size,
+                                    max_samples=samples)
+
+    out, dt = timed(run_batched, warmup_fn=run_batched)
+    rows.append({"runtime": "batched", "replicas": 1, "overlap": False,
+                 "batch_size": batch_size,
+                 "samples_per_sec": out["n"] / dt})
+
+    base_sps = None
+    for r in REPLICA_COUNTS:
+        if r > n_dev:
+            print(f"skipping replicas={r}: only {n_dev} devices")
+            continue
+        for overlap in (False, True):
+            def run_sharded(r=r, overlap=overlap):
+                return serve_stream_sharded(
+                    rt, params, stream(), cost, batch_size=batch_size,
+                    replicas=r, overlap=overlap, max_samples=samples)
+
+            out, dt = timed(run_sharded, warmup_fn=run_sharded)
+            sps = out["n"] / dt
+            if base_sps is None:
+                base_sps = sps
+            rows.append({"runtime": "sharded", "replicas": r,
+                         "overlap": overlap, "batch_size": batch_size,
+                         "samples_per_sec": sps})
+
+    for row in rows:
+        row["samples_per_sec"] = round(row["samples_per_sec"], 2)
+        row["speedup_vs_1_replica"] = round(
+            row["samples_per_sec"] / base_sps, 3) if base_sps else None
+        ov = "overlap" if row["overlap"] else "sync"
+        print(f"serve_sharded/{row['runtime']}/R={row['replicas']}/{ov},"
+              f"{row['samples_per_sec']:.1f} samples/s,"
+              f"x{row['speedup_vs_1_replica']:.2f} vs R=1")
+
+    best4 = max((r["samples_per_sec"] for r in rows
+                 if r.get("replicas") == 4), default=None)
+    scaling = round(best4 / base_sps, 3) if (best4 and base_sps) else None
+    # the injected XLA flag only matters on the cpu backend — on real
+    # accelerators the devices are genuine and flat scaling is a finding,
+    # not a host artifact
+    forced = jax.default_backend() == "cpu"
+    artifact = {
+        "benchmark": "serve_sharded",
+        "config": {"samples": samples, "layers": layers, "steps": steps,
+                   "seq_len": SEQ_LEN, "batch_size": batch_size,
+                   "devices": n_dev, "forced_host_devices": forced,
+                   "backend": jax.default_backend()},
+        "rows": rows,
+        "scaling_1_to_4": scaling,
+        "host_bottleneck": bool(forced and scaling is not None
+                                and scaling < 1.5),
+        "notes": ("forced host-platform devices share one physical CPU: "
+                  "replica scaling here exercises the sharded execution "
+                  "path; expect real speedup only with >=4 physical "
+                  "devices" if forced else ""),
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"wrote {out_path} (scaling 1->4: {scaling}, "
+              f"host_bottleneck={artifact['host_bottleneck']})")
+    return artifact
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=1024)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--out", default="BENCH_serve_sharded.json",
+                    help="JSON artifact path ('' disables)")
+    args = ap.parse_args()
+    run(samples=args.samples, layers=args.layers, steps=args.steps,
+        batch_size=args.batch_size, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

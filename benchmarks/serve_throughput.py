@@ -7,12 +7,17 @@ is dispatch-bound (one jitted launch per sample); the batched runtime
 amortizes dispatch over depth-bucketed launches — the acceptance bar is
 >= 5x samples/sec at B=32 on CPU.
 
+Results are printed as CSV lines and written to a ``BENCH_serve.json``
+artifact (schema documented in benchmarks/README.md) so the perf
+trajectory is machine-readable across PRs.
+
     PYTHONPATH=src:. python benchmarks/serve_throughput.py
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 
 from repro.configs import get_smoke_config
@@ -43,15 +48,22 @@ def build(layers: int, steps: int, seed: int = 0):
 
 
 def timed(fn, *, warmup_fn=None):
+    """Time fn(); warmup_fn runs first, outside the timed region.
+
+    Callers pass the *same* closure as warmup: a shorter warmup would
+    miss pow2 bucket shapes (and the first offload's cloud_fn) that the
+    measured run then compiles inside the timed region.
+    """
     if warmup_fn is not None:
-        warmup_fn()                     # compile outside the timed region
+        warmup_fn()
     t0 = time.time()
     out = fn()
     return out, time.time() - t0
 
 
 def run(samples: int = 512, layers: int = 4, steps: int = 60,
-        side_info: bool = False, print_csv: bool = True):
+        side_info: bool = False, print_csv: bool = True,
+        out_path: str = "BENCH_serve.json"):
     cfg, params = build(layers, steps)
     rt = EdgeCloudRuntime(cfg)
     eval_data = make_dataset("imdb_like", max(2 * samples, 1024), seed=2,
@@ -62,23 +74,22 @@ def run(samples: int = 512, layers: int = 4, steps: int = 60,
         return OnlineStream(eval_data, seed=0)
 
     rows = []
-    out, dt = timed(
-        lambda: serve_stream(rt, params, stream(), cost,
-                             side_info=side_info, max_samples=samples),
-        warmup_fn=lambda: serve_stream(rt, params, stream(), cost,
-                                       side_info=side_info,
-                                       max_samples=2 * layers))
+
+    def run_seq():
+        return serve_stream(rt, params, stream(), cost,
+                            side_info=side_info, max_samples=samples)
+
+    out, dt = timed(run_seq, warmup_fn=run_seq)
     base_sps = out["n"] / dt
     rows.append(("per-sample", 1, base_sps, 1.0))
 
     for b in BATCH_SIZES:
-        out, dt = timed(
-            lambda: serve_stream_batched(rt, params, stream(), cost,
-                                         side_info=side_info, batch_size=b,
-                                         max_samples=samples),
-            warmup_fn=lambda: serve_stream_batched(
-                rt, params, stream(), cost, side_info=side_info,
-                batch_size=b, max_samples=4 * b))
+        def run_batched(b=b):
+            return serve_stream_batched(rt, params, stream(), cost,
+                                        side_info=side_info, batch_size=b,
+                                        max_samples=samples)
+
+        out, dt = timed(run_batched, warmup_fn=run_batched)
         sps = out["n"] / dt
         rows.append(("batched", b, sps, sps / base_sps))
 
@@ -86,6 +97,20 @@ def run(samples: int = 512, layers: int = 4, steps: int = 60,
         for kind, b, sps, speedup in rows:
             print(f"serve_throughput/{kind}/B={b},{sps:.1f} samples/s,"
                   f"speedup={speedup:.2f}x")
+    if out_path:
+        artifact = {
+            "benchmark": "serve_throughput",
+            "config": {"samples": samples, "layers": layers,
+                       "steps": steps, "seq_len": SEQ_LEN,
+                       "side_info": side_info},
+            "rows": [{"runtime": kind, "batch_size": b,
+                      "samples_per_sec": round(sps, 2),
+                      "speedup_vs_per_sample": round(speedup, 3)}
+                     for kind, b, sps, speedup in rows],
+        }
+        with open(out_path, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"wrote {out_path}")
     return rows
 
 
@@ -95,9 +120,11 @@ def main():
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--side-info", action="store_true")
+    ap.add_argument("--out", default="BENCH_serve.json",
+                    help="JSON artifact path ('' disables)")
     args = ap.parse_args()
     run(samples=args.samples, layers=args.layers, steps=args.steps,
-        side_info=args.side_info)
+        side_info=args.side_info, out_path=args.out)
 
 
 if __name__ == "__main__":

@@ -20,7 +20,7 @@ from repro.data import OnlineStream, make_dataset
 from repro.launch.serve import build_testbed
 from repro.launch.train import exit_accuracy
 from repro.serving import (EdgeCloudRuntime, serve_stream,
-                           serve_stream_batched)
+                           serve_stream_batched, serve_stream_sharded)
 
 
 def main():
@@ -33,6 +33,11 @@ def main():
     ap.add_argument("--batch-size", type=int, default=1,
                     help=">1 serves micro-batches through the "
                          "delayed-feedback batched runtime")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help=">0 serves through the sharded data-parallel "
+                         "runtime with that many replicas (on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N first); async offload overlap is on")
     args = ap.parse_args()
 
     cfg, params, model, _, eval_data, (conf_val, correct_val), log = \
@@ -50,7 +55,12 @@ def main():
     results = {}
     for side_info, label in [(False, "SplitEE"), (True, "SplitEE-S")]:
         stream = OnlineStream(eval_data, seed=0)
-        if args.batch_size > 1:
+        if args.replicas > 0:
+            out = serve_stream_sharded(
+                runtime, params, stream, cost, side_info=side_info,
+                batch_size=max(args.batch_size, args.replicas),
+                replicas=args.replicas, max_samples=args.samples)
+        elif args.batch_size > 1:
             out = serve_stream_batched(
                 runtime, params, stream, cost, side_info=side_info,
                 batch_size=args.batch_size, max_samples=args.samples)

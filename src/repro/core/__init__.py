@@ -21,4 +21,7 @@ from repro.core.baselines import (  # noqa: F401
     random_exit,
 )
 from repro.core.thresholds import calibrate_alpha  # noqa: F401
-from repro.core.controller import SplitEEController  # noqa: F401
+from repro.core.controller import (  # noqa: F401
+    ShardUpdate,
+    SplitEEController,
+)

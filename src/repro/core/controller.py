@@ -20,6 +20,27 @@ with updates landing once per batch), and ``update_batch`` computes the
 batch's rewards vectorized then folds them into (q, n) with the exact
 incremental-mean arithmetic of the sequential path, so a batch of size 1
 is bit-identical to per-sample serving.
+
+Sharded serving (serving/sharded.py) splits a micro-batch over R
+data-parallel replicas and extends the same contract one level up:
+
+  * **state freeze** — all R replicas select their shard's arms from the
+    one global state frozen at the batch boundary (``choose_splits`` on
+    the full batch, split contiguously per replica — no replica ever
+    sees another replica's in-flight rewards);
+  * **per-replica statistics** — each replica summarizes its shard with
+    ``prepare_shard_update`` (pure: reward matrix, exit decisions,
+    costs; no state mutation);
+  * **merge** — at the batch boundary ``merge_shard_updates`` folds the
+    R shard summaries into the global (q, n) state in replica order.
+    This is the host-side realization of the cross-replica all-reduce
+    (the bandit state is host-resident by design — O(L) scalars); the
+    fold replays the sequential incremental-mean arithmetic, so merging
+    a single shard is bit-identical to ``update_batch``, and merging R
+    shards equals serving the same samples unsharded in shard order.
+
+``update_batch`` is itself implemented as prepare-then-merge of one
+shard, so every serving path shares one update code path.
 """
 from __future__ import annotations
 
@@ -30,6 +51,22 @@ import numpy as np
 
 from repro.core.policy import BanditState, init_state, select_arm
 from repro.core.rewards import CostModel
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardUpdate:
+    """One replica's micro-batch summary, computed from the frozen state.
+
+    Pure data: everything ``merge_shard_updates`` needs to fold the shard
+    into the global bandit state, with no reference back to the replica
+    that produced it (so shards can be computed concurrently and merged
+    at the batch boundary in replica order).
+    """
+    arms: np.ndarray           # (B_r,) chosen arms (0-indexed split layer)
+    rewards: np.ndarray        # (B_r, L) full reward matrix, eq. (1)
+    exited: np.ndarray         # (B_r,) bool — exited on the edge half
+    costs: np.ndarray          # (B_r,) per-sample device cost
+    offload_bytes: np.ndarray  # (B_r,) bytes shipped (0 when exited)
 
 
 @dataclasses.dataclass
@@ -86,17 +123,17 @@ class SplitEEController:
         r_off = chat[:, None] - self.cost.mu * (g[None, :] + self.cost.offload)
         return np.where(exit_j, r_exit, r_off)
 
-    def update_batch(self, arms: Sequence[int],
-                     conf_paths: Sequence[np.ndarray],
-                     conf_Ls: Sequence[Optional[float]],
-                     offload_bytes: Sequence[int]) -> np.ndarray:
-        """Apply one micro-batch of delayed-feedback updates.
+    def prepare_shard_update(self, arms: Sequence[int],
+                             conf_paths: Sequence[np.ndarray],
+                             conf_Ls: Sequence[Optional[float]],
+                             offload_bytes: Sequence[int]) -> ShardUpdate:
+        """Summarize one replica's shard of a micro-batch — pure.
 
-        Rewards for all B samples (and, with side information, all their
-        sub-`arm` exits) are computed as one vectorized (B, L) reduce;
-        the (q, n) fold then replays the incremental-mean update in
-        sample order with the identical arithmetic of the sequential
-        controller. Returns the per-sample exit decisions.
+        Rewards for all B_r samples (and, with side information, all
+        their sub-`arm` exits) are computed as one vectorized (B_r, L)
+        reduce against the cost model only; the controller state is not
+        read or written, so R replicas can prepare their shards
+        concurrently from the state frozen at the batch boundary.
         """
         L = self.cost.num_layers
         B = len(arms)
@@ -123,28 +160,63 @@ class SplitEEController:
                                 side_info=self.side_info)
         c_all = g_arm.astype(np.float32) + np.where(
             exited, np.float32(0.0), np.float32(self.cost.offload))
+        ob = np.where(exited, 0,
+                      np.asarray(offload_bytes, np.int64))
+        return ShardUpdate(arms=arms, rewards=r_all, exited=exited,
+                           costs=c_all, offload_bytes=ob)
 
+    def merge_shard_updates(
+            self, shards: Sequence[ShardUpdate]) -> np.ndarray:
+        """Fold per-replica shard summaries into the global state.
+
+        The host-side all-reduce at the batch boundary: shards are folded
+        in replica order, each replaying the sequential incremental-mean
+        (q, n) update sample by sample — the identical arithmetic of the
+        per-sample controller, so a single shard is bit-identical to
+        ``update_batch`` and R shards are bit-identical to serving the
+        concatenated samples unsharded. Advances t by the total sample
+        count and returns the concatenated exit decisions.
+        """
         q = np.asarray(self.state.q).copy()
         n = np.asarray(self.state.n).copy()
-        for k in range(B):
-            arm = int(arms[k])
-            if self.side_info:
-                for j in range(arm + 1):
-                    r = float(r_all[k, j])
-                    n[j] += 1
-                    q[j] += (r - q[j]) / n[j]
-            else:
-                r = float(r_all[k, arm])
-                n[arm] += 1
-                q[arm] += (r - q[arm]) / n[arm]
-            self.history["arm"].append(arm)
-            self.history["exited"].append(bool(exited[k]))
-            self.history["reward"].append(float(r_all[k, arm]))
-            self.history["cost"].append(float(c_all[k]))
-            self.history["offload_bytes"].append(
-                0 if exited[k] else int(offload_bytes[k]))
-        self.state = BanditState(q, n, self.state.t + B)
-        return exited
+        total = 0
+        for shard in shards:
+            B = len(shard.arms)
+            total += B
+            for k in range(B):
+                arm = int(shard.arms[k])
+                if self.side_info:
+                    for j in range(arm + 1):
+                        r = float(shard.rewards[k, j])
+                        n[j] += 1
+                        q[j] += (r - q[j]) / n[j]
+                else:
+                    r = float(shard.rewards[k, arm])
+                    n[arm] += 1
+                    q[arm] += (r - q[arm]) / n[arm]
+                self.history["arm"].append(arm)
+                self.history["exited"].append(bool(shard.exited[k]))
+                self.history["reward"].append(float(shard.rewards[k, arm]))
+                self.history["cost"].append(float(shard.costs[k]))
+                self.history["offload_bytes"].append(
+                    int(shard.offload_bytes[k]))
+        self.state = BanditState(q, n, self.state.t + total)
+        if not shards:
+            return np.zeros(0, bool)
+        return np.concatenate([s.exited for s in shards])
+
+    def update_batch(self, arms: Sequence[int],
+                     conf_paths: Sequence[np.ndarray],
+                     conf_Ls: Sequence[Optional[float]],
+                     offload_bytes: Sequence[int]) -> np.ndarray:
+        """Apply one micro-batch of delayed-feedback updates.
+
+        Implemented as prepare-then-merge of a single shard, so the
+        batched and sharded serving paths share one update code path.
+        Returns the per-sample exit decisions.
+        """
+        return self.merge_shard_updates([self.prepare_shard_update(
+            arms, conf_paths, conf_Ls, offload_bytes)])
 
     def update(self, arm: int, conf_path: np.ndarray, conf_L: Optional[float],
                offload_bytes: int = 0):

@@ -9,6 +9,8 @@ touches jax device state. Target: TPU v5e, 256 chips/pod.
 from __future__ import annotations
 
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False, dp: int = 16,
@@ -21,6 +23,28 @@ def make_production_mesh(*, multi_pod: bool = False, dp: int = 16,
     shape = (2, dp, tp) if multi_pod else (dp, tp)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_serving_mesh(replicas: int = 1):
+    """1-D ("data",) mesh over the first `replicas` local devices.
+
+    The sharded serving runtime (serving/sharded.py) is pure data
+    parallelism — each replica holds a full copy of both model halves and
+    serves a contiguous shard of every micro-batch — so its mesh has only
+    the "data" axis. Unlike `make_production_mesh` this adapts to
+    whatever devices exist (CPU hosts included): on a CPU-only host, set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax
+    initializes to expose N host devices.
+    """
+    if replicas < 1:
+        raise ValueError(f"replicas must be >= 1, got {replicas}")
+    devices = jax.devices()
+    if replicas > len(devices):
+        raise ValueError(
+            f"requested {replicas} replicas but only {len(devices)} "
+            f"device(s) visible; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={replicas}")
+    return Mesh(np.asarray(devices[:replicas]), ("data",))
 
 
 def batch_axes(multi_pod: bool):

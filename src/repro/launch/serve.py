@@ -18,7 +18,7 @@ from repro.data import OnlineStream, make_dataset
 from repro.data.synthetic import DOMAINS, VOCAB
 from repro.launch.train import exit_accuracy, train_classifier
 from repro.serving import (EdgeCloudRuntime, serve_stream,
-                           serve_stream_batched)
+                           serve_stream_batched, serve_stream_sharded)
 
 
 def build_testbed(*, layers: int = 6, steps: int = 300,
@@ -54,6 +54,16 @@ def main():
     ap.add_argument("--batch-size", type=int, default=1,
                     help="micro-batch size B; >1 uses the batched "
                          "delayed-feedback runtime (serving/batched.py)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="serve through the sharded data-parallel runtime "
+                         "(serving/sharded.py) on a 1-D device mesh")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel replica count for --mesh (needs "
+                         "that many visible devices; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="with --mesh: disable the async offload queue "
+                         "(cloud flush resolves at its own batch boundary)")
     args = ap.parse_args()
 
     cfg, params, model, _, eval_data, (conf_val, correct_val), log = \
@@ -68,7 +78,15 @@ def main():
 
     runtime = EdgeCloudRuntime(cfg)
     stream = OnlineStream(eval_data, seed=0)
-    if args.batch_size > 1:
+    if args.mesh or args.replicas > 1:
+        out = serve_stream_sharded(runtime, params, stream, cost,
+                                   side_info=args.side_info,
+                                   batch_size=max(args.batch_size,
+                                                  args.replicas),
+                                   replicas=args.replicas,
+                                   overlap=not args.no_overlap,
+                                   max_samples=args.samples)
+    elif args.batch_size > 1:
         out = serve_stream_batched(runtime, params, stream, cost,
                                    side_info=args.side_info,
                                    batch_size=args.batch_size,
@@ -78,7 +96,12 @@ def main():
                            side_info=args.side_info,
                            max_samples=args.samples)
     variant = "SplitEE-S" if args.side_info else "SplitEE"
-    if args.batch_size > 1:
+    if args.mesh or args.replicas > 1:
+        ov = out["overlap"]
+        variant += (f" (sharded R={out['replicas']} "
+                    f"B={out['batch_size']} overlap="
+                    f"{'on' if ov['enabled'] else 'off'})")
+    elif args.batch_size > 1:
         variant += f" (batched B={args.batch_size})"
     print(f"{variant}: n={out['n']} acc={out.get('accuracy', float('nan')):.3f} "
           f"cost={out['cost_total']:.0f}λ offload_frac={out['offload_frac']:.2f} "

@@ -3,6 +3,16 @@
 Every spec is *sanitized* against divisibility: a dimension that does not
 divide evenly over its assigned mesh axes falls back to replication (GSPMD
 could pad, but even sharding keeps memory analysis honest).
+
+The sharded serving runtime (serving/sharded.py) builds its placements
+here too: ``sanitize_spec`` guards every depth-bucketed launch (bucket
+caps are pow2-padded then rounded up to a multiple of the replica
+count, so the row axis always divides the "data" axis and never
+silently falls back to replication),
+and ``param_shardings`` places the replicated model halves. Sharding in
+serving is per-launch and stateless — the cross-batch state (bandit
+q/n/t) is host-side and merged at batch boundaries, never resident on
+the mesh (see core/controller.py).
 """
 from __future__ import annotations
 

@@ -4,5 +4,9 @@ from repro.serving.simulator import (  # noqa: F401
 )
 from repro.serving.batched import (  # noqa: F401
     OffloadQueue,
+    PendingFlush,
     serve_stream_batched,
+)
+from repro.serving.sharded import (  # noqa: F401
+    serve_stream_sharded,
 )

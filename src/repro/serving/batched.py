@@ -47,6 +47,19 @@ def _pow2(k: int) -> int:
     return 1 << (k - 1).bit_length() if k > 1 else 1
 
 
+def _bucket_cap(k: int, multiple: int = 1) -> int:
+    """Bucket row capacity: pow2-padded, rounded up to `multiple`.
+
+    `multiple` is the sharded runtime's replica count — the cap must
+    divide over the mesh's data axis or `sanitize_spec` would silently
+    fall back to replication. Rounding the pow2 cap up keeps the
+    compiled-shape count bounded (<= log2(B)+1 distinct caps per
+    function); with `multiple` = 1 this is exactly `_pow2`.
+    """
+    cap = max(_pow2(k), multiple)
+    return -(-cap // multiple) * multiple
+
+
 def _pad_rows(arr: np.ndarray, cap: int) -> np.ndarray:
     """Pad the leading axis to `cap` rows by repeating the last row."""
     k = arr.shape[0]
@@ -54,6 +67,48 @@ def _pad_rows(arr: np.ndarray, cap: int) -> np.ndarray:
         return arr
     reps = np.repeat(arr[-1:], cap - k, axis=0)
     return np.concatenate([arr, reps], axis=0)
+
+
+class PendingFlush:
+    """In-flight cloud launches from ``OffloadQueue.flush_async``.
+
+    Holds the un-materialized device arrays returned by the dispatched
+    `cloud_fn` calls (JAX async dispatch: the launches are enqueued on
+    the device, the Python call has already returned). ``resolve()``
+    blocks on the device->host transfer and returns the
+    ``{slot: (conf_L, pred_L)}`` map — deferring that call is what lets
+    the sharded runtime overlap batch t's cloud compute with batch
+    t+1's edge selection and launch.
+    """
+
+    def __init__(self, launches):
+        # [(slots, conf_dev, pred_dev)] in depth order — the dispatch
+        # order is fixed at flush time, so resolution order (and thus
+        # slot bookkeeping) is deterministic regardless of when
+        # ``resolve`` is called.
+        self._launches = launches
+        self._result: Optional[Dict[int, tuple]] = None
+
+    def __len__(self):
+        if self._result is not None:
+            return len(self._result)
+        return sum(len(slots) for slots, _, _ in self._launches)
+
+    @property
+    def resolved(self) -> bool:
+        return self._result is not None
+
+    def resolve(self) -> Dict[int, tuple]:
+        if self._result is None:
+            out: Dict[int, tuple] = {}
+            for slots, conf_dev, pred_dev in self._launches:
+                conf_np = np.asarray(conf_dev)
+                pred_np = np.asarray(pred_dev)
+                for j, slot in enumerate(slots):
+                    out[slot] = (float(conf_np[j]), int(pred_np[j]))
+            self._result = out
+            self._launches = []
+        return self._result
 
 
 class OffloadQueue:
@@ -65,11 +120,21 @@ class OffloadQueue:
     distinct depth with all queued rows stacked (padded to a pow2 row
     count, so compilations are bounded by log2(B)+1 shapes) and returns
     ``{slot: (conf_L, pred_L)}`` for the batch's bookkeeping.
+
+    ``flush_async()`` is the overlap-mode variant: it dispatches the same
+    launches but returns a `PendingFlush` whose ``resolve()`` the caller
+    defers — the queue clears at dispatch time, so the next batch's rows
+    accumulate into a fresh queue while the flushed launches are still in
+    flight. ``flush()`` is exactly ``flush_async().resolve()``.
     """
 
-    def __init__(self, runtime: EdgeCloudRuntime, params):
+    def __init__(self, runtime: EdgeCloudRuntime, params, *, put=None):
         self.runtime = runtime
         self.params = params
+        # host->device placement hook: the sharded runtime passes a
+        # device_put that spreads the padded rows over the mesh's data
+        # axis; default is plain single-device placement.
+        self.put = put if put is not None else jnp.asarray
         self.rows: Dict[int, List[np.ndarray]] = {}   # depth -> [(S, D)]
         self.slots: Dict[int, List[int]] = {}
 
@@ -82,21 +147,71 @@ class OffloadQueue:
     def __len__(self):
         return sum(len(v) for v in self.slots.values())
 
-    def flush(self) -> Dict[int, tuple]:
-        out: Dict[int, tuple] = {}
+    def flush_async(self, *, min_rows: int = 1) -> PendingFlush:
+        """Dispatch one `cloud_fn` launch per queued depth; don't block.
+
+        ``min_rows`` sets the pad floor AND rounding multiple (the
+        sharded runtime passes the replica count so every launch divides
+        over the data axis).
+        """
+        launches = []
         for depth in sorted(self.rows):
             slots = self.slots[depth]
             hidden = _pad_rows(np.stack(self.rows[depth]),
-                               _pow2(len(slots)))            # (cap, S, D)
+                               _bucket_cap(len(slots), min_rows))
             conf_L, pred_L = self.runtime.cloud_fn(
-                self.params, jnp.asarray(hidden), jnp.int32(depth))
-            conf_np = np.asarray(conf_L)
-            pred_np = np.asarray(pred_L)
-            for j, slot in enumerate(slots):
-                out[slot] = (float(conf_np[j]), int(pred_np[j]))
+                self.params, self.put(hidden), jnp.int32(depth))
+            launches.append((list(slots), conf_L, pred_L))
         self.rows.clear()
         self.slots.clear()
-        return out
+        return PendingFlush(launches)
+
+    def flush(self) -> Dict[int, tuple]:
+        return self.flush_async().resolve()
+
+
+def _edge_phase(runtime: EdgeCloudRuntime, params, tokens: np.ndarray,
+                arms: np.ndarray, cost: CostModel, queue: OffloadQueue, *,
+                side_info: bool, put=jnp.asarray, replicas: int = 1):
+    """Run one micro-batch's edge pass: one launch per distinct depth.
+
+    Shared by the batched and sharded runtimes — they differ only in
+    host->device placement (``put``) and the bucket-cap rounding multiple
+    (``replicas``). Samples that don't exit are queued on ``queue``;
+    returns (conf_paths, batch_preds) indexed by batch slot.
+    """
+    B = len(arms)
+    conf_paths: List[Optional[np.ndarray]] = [None] * B
+    batch_preds = [0] * B
+    for arm in np.unique(arms):
+        arm = int(arm)
+        idx = np.nonzero(arms == arm)[0]
+        toks = _pad_rows(tokens[idx], _bucket_cap(len(idx), replicas))
+        jb = {"tokens": put(toks)}
+        if side_info:
+            conf_all, pred_all, hidden = runtime.edge_fn_s(
+                params, jb, jnp.int32(arm))
+            conf_np = np.asarray(conf_all)                 # (L, cap)
+            pred_np = np.asarray(pred_all)
+            for j, s in enumerate(idx):
+                conf_paths[s] = conf_np[: arm + 1, j]
+                batch_preds[s] = int(pred_np[arm, j])
+        else:
+            conf_v, pred_v, hidden = runtime.edge_fn(
+                params, jb, jnp.int32(arm))
+            conf_np = np.asarray(conf_v)                   # (cap,)
+            pred_np = np.asarray(pred_v)
+            for j, s in enumerate(idx):
+                conf_paths[s] = conf_np[j:j + 1]
+                batch_preds[s] = int(pred_np[j])
+        keep_j = [j for j, s in enumerate(idx)
+                  if not (float(conf_paths[s][-1]) >= cost.alpha
+                          or arm + 1 == cost.num_layers)]
+        if keep_j:
+            h_np = np.asarray(hidden)            # one transfer per bucket
+            queue.add_rows(arm, h_np[keep_j],
+                           [int(idx[j]) for j in keep_j])
+    return conf_paths, batch_preds
 
 
 def serve_stream_batched(runtime: EdgeCloudRuntime, params, stream,
@@ -123,37 +238,10 @@ def serve_stream_batched(runtime: EdgeCloudRuntime, params, stream,
         tokens = np.stack([np.asarray(s["tokens"]) for s in batch])
         seq_len = tokens.shape[1]
 
-        conf_paths: List[Optional[np.ndarray]] = [None] * B
-        batch_preds = [0] * B
         # ---- edge: one launch per distinct chosen depth ----------------
-        for arm in np.unique(arms):
-            arm = int(arm)
-            idx = np.nonzero(arms == arm)[0]
-            toks = _pad_rows(tokens[idx], _pow2(len(idx)))
-            jb = {"tokens": jnp.asarray(toks)}
-            if side_info:
-                conf_all, pred_all, hidden = runtime.edge_fn_s(
-                    params, jb, jnp.int32(arm))
-                conf_np = np.asarray(conf_all)                 # (L, cap)
-                pred_np = np.asarray(pred_all)
-                for j, s in enumerate(idx):
-                    conf_paths[s] = conf_np[: arm + 1, j]
-                    batch_preds[s] = int(pred_np[arm, j])
-            else:
-                conf_v, pred_v, hidden = runtime.edge_fn(
-                    params, jb, jnp.int32(arm))
-                conf_np = np.asarray(conf_v)                   # (cap,)
-                pred_np = np.asarray(pred_v)
-                for j, s in enumerate(idx):
-                    conf_paths[s] = conf_np[j:j + 1]
-                    batch_preds[s] = int(pred_np[j])
-            keep_j = [j for j, s in enumerate(idx)
-                      if not (float(conf_paths[s][-1]) >= cost.alpha
-                              or arm + 1 == cost.num_layers)]
-            if keep_j:
-                h_np = np.asarray(hidden)        # one transfer per bucket
-                queue.add_rows(arm, h_np[keep_j],
-                               [int(idx[j]) for j in keep_j])
+        conf_paths, batch_preds = _edge_phase(
+            runtime, params, tokens, arms, cost, queue,
+            side_info=side_info)
 
         # ---- cloud: flush the offload queue in depth buckets -----------
         cloud = queue.flush()

@@ -1,0 +1,219 @@
+"""Sharded multi-replica edge/cloud serving — data parallelism over the
+mesh's "data" axis, with the cloud flush overlapped against the next
+edge batch.
+
+`serve_stream_batched` (batched.py) amortizes Python dispatch over
+micro-batches but still runs on one replica and blocks on every cloud
+flush. This module scales the same pipeline out and overlaps it:
+
+  * **data-parallel edge/cloud launches** — every depth-bucketed
+    pow2-padded launch (edge buckets and offload-queue cloud flushes)
+    is placed with a ``NamedSharding`` that splits its row axis over the
+    mesh's "data" axis (`launch/shardings.py:sanitize_spec` guards
+    divisibility; bucket caps are rounded up to a multiple of `replicas`
+    — see `batched._bucket_cap` — so they always divide). Model parameters are placed by
+    `sharding/rules.py:param_specs` — fully replicated on the 1-D
+    serving mesh, Megatron-split if a caller hands a mesh with a
+    "model" axis.
+  * **per-replica bandit statistics** — each replica owns a contiguous
+    shard of the micro-batch. Its arms are its slice of the global
+    frozen-state selection (`choose_splits` is round-robin-then-argmax
+    from the state frozen at the batch boundary, so slicing is exactly
+    per-replica selection with zero communication), and its update
+    statistics are summarized by `SplitEEController.prepare_shard_update`
+    and folded into the global state by `merge_shard_updates` at the
+    batch boundary — the host-side all-reduce. The fold replays the
+    sequential arithmetic, so replica count does NOT change the policy:
+    R shards merge bit-identically to the unsharded batch update.
+  * **async offload (double buffering)** — with ``overlap=True`` the
+    batched `cloud_fn` flush for batch t is *dispatched*
+    (`OffloadQueue.flush_async`, no block) and resolved only after batch
+    t+1's arms are selected and its edge buckets launched. Feedback for
+    batch t therefore lands one batch later than in the synchronous
+    path: delay grows from at most B-1 rounds to at most 2B-1 — still
+    the additive-regret delayed-feedback regime (Joulani et al., 2013).
+    The result dict records the overlap under ``"overlap"``.
+
+Semantics: with ``replicas=1`` and ``overlap=False`` this path is
+**bit-identical** to `serve_stream_batched` (pinned by the differential
+test in tests/test_serving_sharded.py). Overlap changes *when* updates
+land (one batch later); replicas change only *where* compute runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.controller import SplitEEController
+from repro.core.rewards import CostModel
+from repro.data.stream import microbatches
+from repro.launch.mesh import make_serving_mesh
+from repro.launch.shardings import param_shardings, sanitize_spec
+from repro.serving.batched import OffloadQueue, _edge_phase
+from repro.serving.simulator import EdgeCloudRuntime
+
+
+def _shard_sizes(total: int, replicas: int) -> List[int]:
+    """Contiguous per-replica shard sizes (first shards take the tail)."""
+    base, rem = divmod(total, replicas)
+    return [base + (1 if r < rem else 0) for r in range(replicas)]
+
+
+def _data_put(mesh: Mesh):
+    """device_put closure splitting an array's leading axis over "data"."""
+    def put(arr):
+        spec = P("data", *([None] * (np.ndim(arr) - 1)))
+        return jax.device_put(
+            arr, NamedSharding(mesh, sanitize_spec(mesh, spec, arr.shape)))
+    return put
+
+
+@dataclasses.dataclass
+class _BatchCtx:
+    """Everything finalization needs once the cloud flush resolves."""
+    arms: np.ndarray
+    conf_paths: List[Optional[np.ndarray]]
+    batch_preds: List[int]
+    labels: List[Optional[int]]
+    seq_len: int
+    pending: Any                      # PendingFlush
+    overlapped: bool = False
+
+
+def serve_stream_sharded(runtime: EdgeCloudRuntime, params, stream,
+                         cost: CostModel, *, batch_size: int = 32,
+                         replicas: int = 1, mesh: Optional[Mesh] = None,
+                         overlap: bool = True, side_info: bool = False,
+                         beta: float = 1.0, max_samples: int = 0,
+                         labels_for_accounting: bool = True,
+                         record_trace: bool = False) -> Dict[str, Any]:
+    """Serve a sample stream through the sharded SplitEE pipeline.
+
+    Same contract as `serve_stream_batched`, plus:
+
+    ``replicas``  data-parallel replica count (must fit the mesh's
+                  "data" axis; a 1-D mesh over the first `replicas`
+                  devices is built when ``mesh`` is None).
+    ``mesh``      explicit mesh with a "data" axis (and optionally a
+                  "model" axis, which param placement honors).
+    ``overlap``   double-buffer the offload queue: batch t's cloud
+                  flush is resolved only after batch t+1's edge work is
+                  dispatched. Off: cloud resolves at t's own boundary,
+                  reproducing the synchronous batched semantics.
+    """
+    if replicas < 1:
+        raise ValueError(f"replicas must be >= 1, got {replicas}")
+    if mesh is None:
+        mesh = make_serving_mesh(replicas)
+    if "data" not in mesh.axis_names:
+        raise ValueError(f"mesh needs a 'data' axis, got {mesh.axis_names}")
+    if replicas > mesh.shape["data"]:
+        raise ValueError(f"replicas={replicas} exceeds data axis "
+                         f"size {mesh.shape['data']}")
+
+    put = _data_put(mesh)
+    amap = {"model": "model" if "model" in mesh.axis_names else None,
+            "fsdp": None}
+    params = jax.device_put(params,
+                            param_shardings(mesh, params, axis_map=amap))
+
+    ctl = SplitEEController(cost, beta=beta, side_info=side_info)
+    queue = OffloadQueue(runtime, params, put=put)
+    correct, preds = [], []
+    trace: Optional[Dict[str, list]] = (
+        {"conf_path": [], "conf_L": []} if record_trace else None)
+    n = 0
+    batches = 0
+    overlapped = 0
+
+    def finalize(ctx: _BatchCtx):
+        """Resolve the cloud flush, merge per-replica stats, book results."""
+        nonlocal n, overlapped
+        B = len(ctx.arms)
+        cloud = ctx.pending.resolve()
+        conf_Ls: List[Optional[float]] = [None] * B
+        ob = runtime.offload_bytes(1, ctx.seq_len)
+        obs = [0] * B
+        for s, (c_L, p_L) in cloud.items():
+            conf_Ls[s] = c_L
+            ctx.batch_preds[s] = p_L
+            obs[s] = ob
+        # per-replica shard summaries, merged at the batch boundary
+        shards = []
+        lo = 0
+        for size in _shard_sizes(B, replicas):
+            hi = lo + size
+            if size:
+                shards.append(ctl.prepare_shard_update(
+                    ctx.arms[lo:hi], ctx.conf_paths[lo:hi],
+                    conf_Ls[lo:hi], obs[lo:hi]))
+            lo = hi
+        ctl.merge_shard_updates(shards)
+        preds.extend(ctx.batch_preds)
+        if trace is not None:
+            trace["conf_path"].extend(ctx.conf_paths)
+            trace["conf_L"].extend(conf_Ls)
+        if labels_for_accounting:
+            for s in range(B):
+                if ctx.labels[s] is not None:
+                    correct.append(int(ctx.batch_preds[s] == ctx.labels[s]))
+        if ctx.overlapped:
+            overlapped += 1
+        n += B
+
+    inflight: Optional[_BatchCtx] = None
+    for batch in microbatches(stream, batch_size, max_samples):
+        B = len(batch)
+        arms = ctl.choose_splits(B)
+        tokens = np.stack([np.asarray(s["tokens"]) for s in batch])
+        seq_len = tokens.shape[1]
+
+        # ---- edge: one data-parallel launch per distinct chosen depth --
+        conf_paths, batch_preds = _edge_phase(
+            runtime, params, tokens, arms, cost, queue,
+            side_info=side_info, put=put, replicas=replicas)
+
+        # ---- cloud: dispatch the flush; resolve now or next iteration --
+        pending = queue.flush_async(min_rows=replicas)
+        labels = [int(s["labels"]) if "labels" in s else None
+                  for s in batch]
+        ctx = _BatchCtx(arms=arms, conf_paths=conf_paths,
+                        batch_preds=batch_preds, labels=labels,
+                        seq_len=seq_len, pending=pending)
+        batches += 1
+        if overlap:
+            # double buffer: the previous batch's cloud launches have
+            # been in flight for this whole edge phase — resolve them
+            # now, then leave this batch's flush pending.
+            if inflight is not None:
+                inflight.overlapped = True
+                finalize(inflight)
+            inflight = ctx
+        else:
+            finalize(ctx)
+    if inflight is not None:
+        finalize(inflight)
+
+    hist = {k: np.asarray(v) for k, v in ctl.history.items()}
+    out = {
+        "n": n,
+        "batch_size": batch_size,
+        "replicas": replicas,
+        "preds": np.asarray(preds),
+        "cost_total": float(hist["cost"].sum()),
+        "offload_frac": float(1.0 - hist["exited"].mean()) if n else 0.0,
+        "offload_bytes": int(hist["offload_bytes"].sum()),
+        "arms": hist["arm"],
+        "rewards": hist["reward"],
+        "overlap": {"enabled": overlap, "batches": batches,
+                    "batches_overlapped": overlapped},
+    }
+    if correct:
+        out["accuracy"] = float(np.mean(correct))
+    if trace is not None:
+        out["trace"] = trace
+    return out

@@ -10,6 +10,16 @@ Parameter sharding is assigned by leaf path (``param_specs``): the Megatron
 mapping — column-parallel in-projections, row-parallel out-projections,
 vocab-sharded embedding/exit-head, expert FFN inner dim sharded over
 "model" (tensor-parallel experts; see DESIGN.md).
+
+Consumers: the dry-run and training launchers bind the full
+(data, model) production mesh; the sharded serving runtime
+(serving/sharded.py) reuses ``param_specs`` for parameter placement on
+its 1-D "data" mesh (everything replicates — each replica holds both
+model halves; hand it a mesh with a "model" axis and the Megatron rules
+apply unchanged). Serving shards only *activations* over "data": the
+bandit state is deliberately NOT sharded — it stays host-side, frozen
+per micro-batch, and per-replica statistics merge at batch boundaries
+(see core/controller.py for the state-freeze and merge semantics).
 """
 from __future__ import annotations
 

@@ -1,0 +1,321 @@
+"""Differential tests for the sharded serving runtime + controller merge.
+
+Pins serving/sharded.py to its references:
+
+* 1 replica, overlap off -> bit-identical to `serve_stream_batched`
+  (arms, predictions, rewards, cost totals, offload bytes);
+* overlap on -> exact replay by an independent NumPy implementation of
+  the double-buffered schedule (batch t's update folds only after batch
+  t+1's arms are selected);
+* `merge_shard_updates` folding R contiguous shards == `update_batch`
+  on the unsharded batch, bitwise (state, history);
+* multi-replica execution (subprocess with 4 forced host devices)
+  matches the single-replica runtime on the same stream.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import CostModel, SplitEEController
+from repro.data import OnlineStream, make_dataset
+from repro.data.synthetic import VOCAB
+from repro.launch.train import train_classifier
+from repro.serving import (EdgeCloudRuntime, serve_stream_batched,
+                           serve_stream_sharded)
+
+
+@pytest.fixture(scope="module")
+def served():
+    base = get_smoke_config("elasticbert12")
+    cfg = dataclasses.replace(
+        base, num_layers=3, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=256, vocab_size=VOCAB, num_classes=2, dtype="float32")
+    train = make_dataset("sst2_like", 2048, seed=0)
+    params, model, _ = train_classifier(cfg, train, steps=60, batch_size=64)
+    eval_data = make_dataset("imdb_like", 400, seed=2)
+    return cfg, params, model, eval_data
+
+
+# ------------------------------------------------- R=1 sync bit-identity
+
+@pytest.mark.parametrize("side_info,batch_size",
+                         [(False, 1), (False, 8), (True, 8)])
+def test_sharded_r1_sync_bit_identical(served, side_info, batch_size):
+    """1 replica + overlap off must reproduce the batched runtime exactly
+    — the NamedSharding placement on a 1-device mesh is numerics-free."""
+    cfg, params, _, eval_data = served
+    rt = EdgeCloudRuntime(cfg)
+    cost = CostModel(num_layers=cfg.num_layers, alpha=0.75, offload=3.0)
+    ref = serve_stream_batched(rt, params, OnlineStream(eval_data, seed=0),
+                               cost, side_info=side_info,
+                               batch_size=batch_size, max_samples=120)
+    got = serve_stream_sharded(rt, params, OnlineStream(eval_data, seed=0),
+                               cost, side_info=side_info,
+                               batch_size=batch_size, replicas=1,
+                               overlap=False, max_samples=120)
+    assert got["n"] == ref["n"]
+    np.testing.assert_array_equal(got["arms"], ref["arms"])
+    np.testing.assert_array_equal(got["preds"], ref["preds"])
+    np.testing.assert_array_equal(got["rewards"], ref["rewards"])
+    assert got["cost_total"] == ref["cost_total"]
+    assert got["offload_bytes"] == ref["offload_bytes"]
+    assert got["offload_frac"] == ref["offload_frac"]
+    assert got.get("accuracy") == ref.get("accuracy")
+    assert got["overlap"] == {"enabled": False,
+                              "batches": got["overlap"]["batches"],
+                              "batches_overlapped": 0}
+
+
+# --------------------------------------------- overlap-mode NumPy replay
+
+def _numpy_overlap_replay(cost: CostModel, beta, batch_size, conf_paths,
+                          conf_Ls, ob_per_sample, *, side_info):
+    """Independent replay of the double-buffered schedule: arms for batch
+    t are drawn from a state that has folded updates only through batch
+    t-1's *predecessor* (batch t-1 folds after t's selection)."""
+    L = cost.num_layers
+    q = np.zeros(L, np.float64)
+    n = np.zeros(L, np.float64)
+    t = 0
+    arms, rewards, costs, obs = [], [], [], []
+
+    def fold(batch):
+        nonlocal t
+        for arm, path, cL in batch:
+            conf_i = float(path[-1])
+            chat = conf_i if cL is None else float(cL)
+
+            def r_of(j1, cj):
+                g = float(cost.gamma(j1, side_info=side_info))
+                if cj >= cost.alpha or j1 == L:
+                    return cj - cost.mu * g
+                return chat - cost.mu * (g + cost.offload)
+
+            if side_info:
+                assert len(path) == arm + 1
+                for j in range(arm + 1):
+                    r = r_of(j + 1, float(path[j]))
+                    n[j] += 1
+                    q[j] += (r - q[j]) / n[j]
+            else:
+                r = r_of(arm + 1, conf_i)
+                n[arm] += 1
+                q[arm] += (r - q[arm]) / n[arm]
+            exited = conf_i >= cost.alpha or arm + 1 == L
+            rewards.append(r_of(arm + 1, conf_i))
+            g = float(cost.gamma(arm + 1, side_info=side_info))
+            costs.append(g + (0.0 if exited else cost.offload))
+            obs.append(0 if exited else ob_per_sample)
+        t += len(batch)
+
+    N = len(conf_paths)
+    pending = None
+    i = 0
+    while i < N:
+        bsz = min(batch_size, N - i)
+        batch_arms = []
+        for k in range(bsz):
+            if t + k < L:
+                batch_arms.append((t + k) % L)
+            else:
+                ucb = q + beta * np.sqrt(
+                    np.log(max(t, 1)) / np.maximum(n, 1e-9))
+                batch_arms.append(int(np.argmax(ucb)))
+        arms.extend(batch_arms)
+        batch = [(batch_arms[k],
+                  np.asarray(conf_paths[i + k], np.float64).reshape(-1),
+                  conf_Ls[i + k]) for k in range(bsz)]
+        if pending is not None:
+            fold(pending)          # batch t-1 folds after t's selection
+        pending = batch
+        i += bsz
+    if pending is not None:
+        fold(pending)
+    return {"arms": np.asarray(arms), "rewards": np.asarray(rewards),
+            "cost_total": float(np.sum(costs)),
+            "offload_bytes": int(np.sum(obs))}
+
+
+@pytest.mark.parametrize("side_info,batch_size",
+                         [(False, 8), (False, 32), (True, 8)])
+def test_sharded_overlap_matches_numpy_replay(served, side_info,
+                                              batch_size):
+    cfg, params, _, eval_data = served
+    rt = EdgeCloudRuntime(cfg)
+    cost = CostModel(num_layers=cfg.num_layers, alpha=0.75, offload=3.0)
+    out = serve_stream_sharded(rt, params, OnlineStream(eval_data, seed=0),
+                               cost, side_info=side_info,
+                               batch_size=batch_size, replicas=1,
+                               overlap=True, max_samples=200,
+                               record_trace=True)
+    seq_len = eval_data["tokens"].shape[1]
+    ref = _numpy_overlap_replay(
+        cost, 1.0, batch_size, out["trace"]["conf_path"],
+        out["trace"]["conf_L"], rt.offload_bytes(1, seq_len),
+        side_info=side_info)
+    np.testing.assert_array_equal(out["arms"], ref["arms"])
+    np.testing.assert_allclose(out["rewards"], ref["rewards"],
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(out["cost_total"], ref["cost_total"],
+                               rtol=1e-5)
+    assert out["offload_bytes"] == ref["offload_bytes"]
+    ov = out["overlap"]
+    assert ov["enabled"] and ov["batches_overlapped"] == ov["batches"] - 1
+
+
+def test_overlap_single_batch_equals_sync(served):
+    """With the whole stream in one micro-batch there is nothing to
+    overlap — both modes must agree exactly."""
+    cfg, params, _, eval_data = served
+    rt = EdgeCloudRuntime(cfg)
+    cost = CostModel(num_layers=cfg.num_layers, alpha=0.75, offload=3.0)
+    kw = dict(batch_size=64, replicas=1, max_samples=64)
+    a = serve_stream_sharded(rt, params, OnlineStream(eval_data, seed=0),
+                             cost, overlap=True, **kw)
+    b = serve_stream_sharded(rt, params, OnlineStream(eval_data, seed=0),
+                             cost, overlap=False, **kw)
+    np.testing.assert_array_equal(a["arms"], b["arms"])
+    np.testing.assert_array_equal(a["rewards"], b["rewards"])
+    assert a["cost_total"] == b["cost_total"]
+    assert a["overlap"]["batches_overlapped"] == 0
+
+
+# -------------------------------------------------- controller merge op
+
+@pytest.mark.parametrize("side_info", [False, True])
+@pytest.mark.parametrize("splits", [(12,), (5, 4, 3), (1,) * 12])
+def test_merge_shard_updates_equals_update_batch(side_info, splits):
+    """Folding R contiguous shards == the unsharded batch update,
+    bitwise in state and history."""
+    L = 5
+    cost = CostModel(num_layers=L, alpha=0.7, offload=4.0)
+    rng = np.random.default_rng(3)
+    B = sum(splits)
+    arms = rng.integers(0, L, B)
+    paths = [rng.uniform(0.05, 0.99, int(a) + 1) if side_info
+             else rng.uniform(0.05, 0.99, 1) for a in arms]
+    confL = [None if rng.random() < 0.5 else float(rng.uniform(0.3, 0.99))
+             for _ in range(B)]
+    obs = list(rng.integers(0, 10_000, B))
+
+    ref = SplitEEController(cost, side_info=side_info)
+    ref.update_batch(arms, paths, confL, obs)
+
+    got = SplitEEController(cost, side_info=side_info)
+    shards, lo = [], 0
+    for size in splits:
+        hi = lo + size
+        shards.append(got.prepare_shard_update(
+            arms[lo:hi], paths[lo:hi], confL[lo:hi], obs[lo:hi]))
+        lo = hi
+    got.merge_shard_updates(shards)
+
+    np.testing.assert_array_equal(np.asarray(got.state.q),
+                                  np.asarray(ref.state.q))
+    np.testing.assert_array_equal(np.asarray(got.state.n),
+                                  np.asarray(ref.state.n))
+    assert int(got.state.t) == int(ref.state.t)
+    for key in ref.history:
+        assert got.history[key] == ref.history[key], key
+
+
+def test_merge_empty_shard_list_is_noop():
+    cost = CostModel(num_layers=4, alpha=0.7, offload=2.0)
+    ctl = SplitEEController(cost)
+    q0, t0 = np.asarray(ctl.state.q).copy(), int(ctl.state.t)
+    exited = ctl.merge_shard_updates([])
+    assert exited.shape == (0,)
+    np.testing.assert_array_equal(np.asarray(ctl.state.q), q0)
+    assert int(ctl.state.t) == t0
+    assert ctl.history["arm"] == []
+
+
+def test_prepare_shard_update_is_pure():
+    cost = CostModel(num_layers=4, alpha=0.7, offload=2.0)
+    ctl = SplitEEController(cost)
+    q0 = np.asarray(ctl.state.q).copy()
+    ctl.prepare_shard_update([1], [np.asarray([0.9])], [None], [0])
+    np.testing.assert_array_equal(np.asarray(ctl.state.q), q0)
+    assert int(ctl.state.t) == 0
+    assert ctl.history["arm"] == []
+
+
+# ------------------------------------- multi-replica subprocess execution
+
+_MULTI_REPLICA_SCRIPT = textwrap.dedent("""
+    import dataclasses
+    import jax
+    import numpy as np
+    from repro.configs import get_smoke_config
+    from repro.core import CostModel
+    from repro.data import OnlineStream, make_dataset
+    from repro.data.synthetic import VOCAB
+    from repro.models.api import build_model
+    from repro.serving import (EdgeCloudRuntime, serve_stream_batched,
+                               serve_stream_sharded)
+
+    assert len(jax.devices()) == 4, jax.devices()
+    base = get_smoke_config("elasticbert12")
+    cfg = dataclasses.replace(
+        base, num_layers=3, d_model=32, num_heads=2, num_kv_heads=2,
+        d_ff=128, vocab_size=VOCAB, num_classes=2, dtype="float32")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    eval_data = make_dataset("imdb_like", 128, seed=2, seq_len=16)
+    rt = EdgeCloudRuntime(cfg)
+    cost = CostModel(num_layers=cfg.num_layers, alpha=0.6, offload=3.0)
+    ref = serve_stream_batched(rt, params,
+                               OnlineStream(eval_data, seed=0), cost,
+                               batch_size=16, max_samples=96)
+    for R in (2, 3, 4):
+        got = serve_stream_sharded(rt, params,
+                                   OnlineStream(eval_data, seed=0), cost,
+                                   batch_size=16, replicas=R,
+                                   overlap=False, max_samples=96)
+        np.testing.assert_array_equal(got["arms"], ref["arms"])
+        np.testing.assert_array_equal(got["preds"], ref["preds"])
+        np.testing.assert_allclose(got["rewards"], ref["rewards"],
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(got["cost_total"], ref["cost_total"],
+                                   rtol=1e-6)
+        assert got["offload_bytes"] == ref["offload_bytes"]
+    print("MULTI_REPLICA_OK")
+""")
+
+
+def test_bucket_cap_divides_replicas():
+    """Bucket caps must divide the data axis for every replica count —
+    a cap that doesn't would make sanitize_spec silently replicate the
+    launch instead of sharding it."""
+    from repro.serving.batched import _bucket_cap, _pow2
+    for k in (1, 2, 3, 5, 8, 13, 32):
+        assert _bucket_cap(k, 1) == _pow2(k)       # batched path unchanged
+        for m in (1, 2, 3, 4, 6, 8):
+            cap = _bucket_cap(k, m)
+            assert cap >= k and cap % m == 0, (k, m, cap)
+    # pow2 first (bounds compiled shapes), then rounded up to divide m
+    assert _bucket_cap(3, 3) == 6
+    assert _bucket_cap(4, 3) == 6
+    assert _bucket_cap(8, 3) == 9
+
+
+def test_multi_replica_matches_batched_subprocess():
+    """Replica count must not change the policy: 2-, 3- (non-pow2 caps)
+    and 4-replica serving over forced host devices reproduces the
+    single-replica runtime. Subprocess because the forced device count
+    must precede jax init."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=4").strip()
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _MULTI_REPLICA_SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "MULTI_REPLICA_OK" in proc.stdout

@@ -1,0 +1,167 @@
+"""Edge cases for the serving ingest path (`data.stream.microbatches`)
+and flush ordering of the `OffloadQueue` in sync and async modes.
+
+The queue tests run against a stub runtime (no model, no jit): the
+queue's contract — depth-sorted dispatch, pow2/min_rows padding, slot
+bookkeeping, clear-at-dispatch — is independent of what `cloud_fn`
+computes.
+"""
+import numpy as np
+
+from repro.data import microbatches
+from repro.serving import OffloadQueue, PendingFlush
+
+
+# ---------------------------------------------------- microbatches edges
+
+def test_microbatches_empty_stream():
+    assert list(microbatches(iter([]), 8)) == []
+    assert list(microbatches(iter([]), 8, max_samples=4)) == []
+
+
+def test_microbatches_batch_larger_than_stream():
+    stream = [{"tokens": np.full(4, i)} for i in range(3)]
+    got = list(microbatches(iter(stream), 16))
+    assert [len(b) for b in got] == [3]
+    assert [int(s["tokens"][0]) for s in got[0]] == [0, 1, 2]
+
+
+def test_microbatches_non_divisible_tail():
+    stream = [{"tokens": np.full(4, i)} for i in range(10)]
+    got = list(microbatches(iter(stream), 3))
+    assert [len(b) for b in got] == [3, 3, 3, 1]
+    assert int(got[-1][0]["tokens"][0]) == 9
+
+
+def test_microbatches_max_samples_cuts_mid_batch():
+    stream = ({"tokens": np.full(4, i)} for i in range(100))
+    got = list(microbatches(stream, 8, max_samples=11))
+    assert [len(b) for b in got] == [8, 3]
+
+
+def test_microbatches_max_samples_on_batch_boundary():
+    stream = ({"tokens": np.full(4, i)} for i in range(100))
+    got = list(microbatches(stream, 4, max_samples=8))
+    assert [len(b) for b in got] == [4, 4]
+
+
+def test_microbatches_exact_single_batch():
+    stream = [{"tokens": np.full(4, i)} for i in range(4)]
+    got = list(microbatches(iter(stream), 4))
+    assert [len(b) for b in got] == [4]
+
+
+# ----------------------------------------------------- offload queue stub
+
+class _StubRuntime:
+    """Records every cloud_fn dispatch; returns row-identifying outputs.
+
+    conf row j encodes (depth, j) so the slot map can be checked against
+    exactly which launch and row produced each result.
+    """
+
+    def __init__(self):
+        self.calls = []
+
+    def cloud_fn(self, params, hidden, depth):
+        hidden = np.asarray(hidden)
+        depth = int(depth)
+        self.calls.append((depth, hidden.shape[0]))
+        rows = np.arange(hidden.shape[0])
+        return depth * 100.0 + rows, 10 * depth + rows
+
+
+def _queue():
+    rt = _StubRuntime()
+    return rt, OffloadQueue(rt, params=None)
+
+
+def _rows(k, seq=2, d=3, base=0.0):
+    return np.full((k, seq, d), base, np.float32)
+
+
+def test_flush_depth_order_and_slots():
+    rt, q = _queue()
+    q.add_rows(2, _rows(2), [7, 9])
+    q.add_rows(0, _rows(1), [4])
+    assert len(q) == 3
+    out = q.flush()
+    # depth-sorted dispatch: depth 0 first, then depth 2
+    assert [c[0] for c in rt.calls] == [0, 2]
+    assert out[4] == (0.0, 0)             # depth 0, row 0
+    assert out[7] == (200.0, 20)          # depth 2, row 0
+    assert out[9] == (201.0, 21)          # depth 2, row 1
+    assert len(q) == 0
+
+
+def test_flush_pow2_and_min_rows_padding():
+    rt, q = _queue()
+    q.add_rows(1, _rows(3), [0, 1, 2])
+    q.flush()
+    assert rt.calls == [(1, 4)]           # 3 rows -> pow2 pad to 4
+    q.add_rows(1, _rows(1), [5])
+    q.flush_async(min_rows=4).resolve()
+    assert rt.calls[-1] == (1, 4)         # min_rows floor (replica count)
+
+
+def test_flush_async_clears_queue_at_dispatch():
+    rt, q = _queue()
+    q.add_rows(0, _rows(2), [1, 2])
+    pending = q.flush_async()
+    assert len(q) == 0                    # queue reusable immediately
+    assert not pending.resolved
+    # next batch accumulates while the flush is in flight
+    q.add_rows(1, _rows(1), [3])
+    assert len(q) == 1
+    out = pending.resolve()
+    assert sorted(out) == [1, 2]
+    assert pending.resolved
+    # the in-flight resolve never saw the new rows
+    assert [c[0] for c in rt.calls] == [0]
+
+
+def test_flush_async_interleaved_batches_keep_ordering():
+    """Two in-flight flushes resolve independently with per-flush slot
+    maps, regardless of resolution order."""
+    rt, q = _queue()
+    q.add_rows(0, _rows(1), [10])
+    p1 = q.flush_async()
+    q.add_rows(0, _rows(2), [20, 21])
+    q.add_rows(2, _rows(1), [22])
+    p2 = q.flush_async()
+    # dispatch order: batch 1's depth-0, then batch 2's depth-0, depth-2
+    assert [c[0] for c in rt.calls] == [0, 0, 2]
+    out2 = p2.resolve()                   # resolve out of order
+    out1 = p1.resolve()
+    assert sorted(out1) == [10]
+    assert sorted(out2) == [20, 21, 22]
+    assert out2[22] == (200.0, 20)
+
+
+def test_flush_async_resolve_is_idempotent():
+    _, q = _queue()
+    q.add_rows(1, _rows(1), [0])
+    pending = q.flush_async()
+    assert len(pending) == 1
+    first = pending.resolve()
+    assert pending.resolve() is first
+    assert len(pending) == 1
+
+
+def test_flush_equals_flush_async_resolve():
+    rt1, q1 = _queue()
+    rt2, q2 = _queue()
+    for q in (q1, q2):
+        q.add_rows(1, _rows(2, base=0.5), [0, 3])
+        q.add_rows(0, _rows(1, base=0.5), [1])
+    assert q1.flush() == q2.flush_async().resolve()
+    assert rt1.calls == rt2.calls
+
+
+def test_empty_flush():
+    _, q = _queue()
+    assert q.flush() == {}
+    pending = q.flush_async()
+    assert isinstance(pending, PendingFlush)
+    assert len(pending) == 0
+    assert pending.resolve() == {}
