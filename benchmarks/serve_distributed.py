@@ -1,0 +1,152 @@
+"""Distributed serving throughput: processes × offload pipeline depth.
+
+Sweeps the multi-process serving runtime (serving/distributed.py) over
+process counts {1, 2} and offload pipeline depths K in {1, 2, 4} (plus a
+sync K=0 reference), spawning each configuration as a real
+jax.distributed cluster of subprocess workers
+(`run_distributed_subprocesses`). Every worker builds the same
+deterministic testbed, serves the same stream, and reports its serving
+wall time; cluster throughput is global samples over the slowest
+worker's time. Writes a ``BENCH_serve_distributed.json`` artifact
+(schema in benchmarks/README.md).
+
+On a CPU-only host every worker's forced host device carves the SAME
+physical cores, and the whole cluster shares one machine — flat or
+negative scaling with process count is a host artifact, recorded under
+``host_bottleneck`` exactly as in BENCH_serve_sharded.json. The sweep
+still exercises the real multi-process path end to end: coordinator
+bootstrap, per-host slicing, KV-store exchange, cross-host merge.
+
+    PYTHONPATH=src:benchmarks python benchmarks/serve_distributed.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+PROCESS_COUNTS = [1, 2]
+OVERLAP_DEPTHS = [0, 1, 2, 4]      # 0 = synchronous (no overlap)
+
+_WORKER_TEMPLATE = """
+import json, time
+from repro.serving import init_distributed_from_env
+init_distributed_from_env()
+import jax
+from repro.core import CostModel
+from repro.data import OnlineStream, make_dataset
+from repro.serving import EdgeCloudRuntime, serve_stream_distributed
+from serve_throughput import SEQ_LEN, build
+
+cfg, params = build({layers}, {steps})
+rt = EdgeCloudRuntime(cfg)
+eval_data = make_dataset("imdb_like", max(2 * {samples}, 1024), seed=2,
+                         seq_len=SEQ_LEN)
+cost = CostModel(num_layers=cfg.num_layers, alpha=0.75, offload=3.0)
+
+def run():
+    return serve_stream_distributed(
+        rt, params, OnlineStream(eval_data, seed=0), cost,
+        batch_size={batch_size}, replicas=1, overlap={overlap},
+        overlap_depth={overlap_depth}, max_samples={samples})
+
+run()                                  # warmup: compile all bucket shapes
+t0 = time.time()
+out = run()
+dt = time.time() - t0
+print("WORKER_RESULT " + json.dumps(
+    {{"host": out["distributed"]["host_id"], "n": out["n"], "dt": dt,
+      "backend": jax.default_backend()}}))
+"""
+
+
+def run(samples: int = 512, layers: int = 4, steps: int = 60,
+        batch_size: int = 64,
+        out_path: str = "BENCH_serve_distributed.json"):
+    # imported lazily so the parent never initializes a jax backend the
+    # workers would then inherit constraints from
+    from repro.serving import run_distributed_subprocesses
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {"PYTHONPATH": os.pathsep.join(
+        [os.path.join(repo, "src"), os.path.join(repo, "benchmarks")])}
+
+    rows = []
+    base_sps = None
+    for procs in PROCESS_COUNTS:
+        for depth in OVERLAP_DEPTHS:
+            worker = _WORKER_TEMPLATE.format(
+                layers=layers, steps=steps, samples=samples,
+                batch_size=batch_size, overlap=depth > 0,
+                overlap_depth=max(depth, 1))
+            done = run_distributed_subprocesses(
+                worker, procs, devices_per_process=1, env=env, cwd=repo)
+            reports = []
+            for i, p in enumerate(done):
+                if p.returncode != 0:
+                    raise SystemExit(
+                        f"worker {i} (P={procs} K={depth}) failed:\n"
+                        f"{p.stderr[-4000:]}")
+                line = [ln for ln in p.stdout.splitlines()
+                        if ln.startswith("WORKER_RESULT ")][0]
+                reports.append(json.loads(line[len("WORKER_RESULT "):]))
+            n = reports[0]["n"]
+            dt = max(r["dt"] for r in reports)   # cluster = slowest host
+            sps = n / dt
+            if base_sps is None:                 # P=1, sync reference
+                base_sps = sps
+            rows.append({"num_processes": procs, "overlap_depth": depth,
+                         "overlap": depth > 0, "batch_size": batch_size,
+                         "samples_per_sec": round(sps, 2),
+                         "speedup_vs_p1_sync": round(sps / base_sps, 3)})
+            ov = f"K={depth}" if depth else "sync"
+            print(f"serve_distributed/P={procs}/{ov},"
+                  f"{sps:.1f} samples/s,"
+                  f"x{rows[-1]['speedup_vs_p1_sync']:.2f} vs P=1 sync")
+
+    backend = reports[0]["backend"]
+    best2 = max((r["samples_per_sec"] for r in rows
+                 if r["num_processes"] == 2), default=None)
+    scaling = round(best2 / base_sps, 3) if (best2 and base_sps) else None
+    forced = backend == "cpu"
+    artifact = {
+        "benchmark": "serve_distributed",
+        "config": {"samples": samples, "layers": layers, "steps": steps,
+                   "batch_size": batch_size,
+                   "process_counts": PROCESS_COUNTS,
+                   "overlap_depths": OVERLAP_DEPTHS,
+                   "forced_host_devices": forced, "backend": backend},
+        "rows": rows,
+        "scaling_1_to_2": scaling,
+        "host_bottleneck": bool(forced and scaling is not None
+                                and scaling < 1.2),
+        "notes": ("all processes share one physical CPU (forced host "
+                  "devices): process scaling here exercises the "
+                  "multi-process path — coordinator bootstrap, per-host "
+                  "slicing, KV-store exchange, cross-host merge — not a "
+                  "hardware speedup; expect real scaling only with one "
+                  "machine (or accelerator) per process" if forced else ""),
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"wrote {out_path} (scaling 1->2: {scaling}, "
+              f"host_bottleneck={artifact['host_bottleneck']})")
+    return artifact
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--out", default="BENCH_serve_distributed.json",
+                    help="JSON artifact path ('' disables)")
+    args = ap.parse_args()
+    run(samples=args.samples, layers=args.layers, steps=args.steps,
+        batch_size=args.batch_size, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,19 +8,37 @@
   4. compare SplitEE vs SplitEE-S vs final-exit / cascade baselines.
 
     PYTHONPATH=src python examples/serve_splitee.py --samples 800
+
+Multi-process serving spawns itself (serving/distributed.py):
+
+    PYTHONPATH=src python examples/serve_splitee.py --distributed \\
+        --num-processes 2 --batch-size 32
 """
 import argparse
 import dataclasses
+import os
 
+from repro.serving.distributed import (ENV_COORDINATOR,
+                                       drive_respawned_cluster,
+                                       init_distributed_from_env)
+
+# worker mode iff spawned by respawn_distributed; jax.distributed must
+# initialize before anything touches a jax backend
+_IN_CLUSTER = os.environ.get(ENV_COORDINATOR) is not None
+if _IN_CLUSTER:
+    init_distributed_from_env()
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CostModel, calibrate_alpha, confidence_cascade, final_exit
-from repro.data import OnlineStream, make_dataset
+from repro.data import OnlineStream
 from repro.launch.serve import build_testbed
 from repro.launch.train import exit_accuracy
 from repro.serving import (EdgeCloudRuntime, serve_stream,
-                           serve_stream_batched, serve_stream_sharded)
+                           serve_stream_batched, serve_stream_distributed,
+                           serve_stream_sharded)
 
 
 def main():
@@ -38,28 +56,52 @@ def main():
                          "runtime with that many replicas (on CPU set "
                          "XLA_FLAGS=--xla_force_host_platform_device_"
                          "count=N first); async offload overlap is on")
+    ap.add_argument("--overlap-depth", type=int, default=1,
+                    help="max in-flight cloud flushes K for the sharded/"
+                         "distributed async offload pipeline")
+    ap.add_argument("--distributed", action="store_true",
+                    help="serve across jax.distributed processes; spawns "
+                         "--num-processes workers when run standalone")
+    ap.add_argument("--num-processes", type=int, default=2,
+                    help="worker count for --distributed self-spawn")
     args = ap.parse_args()
+
+    if args.distributed and not _IN_CLUSTER:
+        drive_respawned_cluster(args.num_processes,
+                                devices_per_process=max(args.replicas, 1))
+        return
+    host0 = (not _IN_CLUSTER) or jax.process_index() == 0
 
     cfg, params, model, _, eval_data, (conf_val, correct_val), log = \
         build_testbed(layers=args.layers, steps=args.steps,
                       eval_domain=args.eval_domain)
-    print(f"testbed trained (final loss {log[-1]['loss']:.4f})")
+    if host0:
+        print(f"testbed trained (final loss {log[-1]['loss']:.4f})")
 
     cost = CostModel(num_layers=cfg.num_layers, offload=args.offload)
     alpha = calibrate_alpha(conf_val, cost, correct_val)
     cost = dataclasses.replace(cost, alpha=alpha)
-    print(f"alpha={alpha:.2f} (labeled validation split, "
-          f"fine-tune domain)")
+    if host0:
+        print(f"alpha={alpha:.2f} (labeled validation split, "
+              f"fine-tune domain)")
 
     runtime = EdgeCloudRuntime(cfg)
     results = {}
     for side_info, label in [(False, "SplitEE"), (True, "SplitEE-S")]:
         stream = OnlineStream(eval_data, seed=0)
-        if args.replicas > 0:
+        if _IN_CLUSTER:
+            out = serve_stream_distributed(
+                runtime, params, stream, cost, side_info=side_info,
+                batch_size=max(args.batch_size, args.replicas, 1),
+                replicas=max(args.replicas, 1),
+                overlap_depth=args.overlap_depth,
+                max_samples=args.samples)
+        elif args.replicas > 0:
             out = serve_stream_sharded(
                 runtime, params, stream, cost, side_info=side_info,
                 batch_size=max(args.batch_size, args.replicas),
-                replicas=args.replicas, max_samples=args.samples)
+                replicas=args.replicas, overlap_depth=args.overlap_depth,
+                max_samples=args.samples)
         elif args.batch_size > 1:
             out = serve_stream_batched(
                 runtime, params, stream, cost, side_info=side_info,
@@ -71,12 +113,15 @@ def main():
         results[label] = out
         arms = np.bincount(out["arms"][-200:],
                            minlength=cfg.num_layers)
-        print(f"{label:10s} acc={out['accuracy']:.3f} "
-              f"cost={out['cost_total']:.0f}λ "
-              f"offload={out['offload_frac']:.0%} "
-              f"({out['offload_bytes']/1e6:.2f} MB shipped) "
-              f"modal split={int(arms.argmax()) + 1}")
+        if host0:
+            print(f"{label:10s} acc={out['accuracy']:.3f} "
+                  f"cost={out['cost_total']:.0f}λ "
+                  f"offload={out['offload_frac']:.0%} "
+                  f"({out['offload_bytes']/1e6:.2f} MB shipped) "
+                  f"modal split={int(arms.argmax()) + 1}")
 
+    if not host0:
+        return                      # one summary per cluster, from host 0
     n = results["SplitEE"]["n"]
     order = OnlineStream(eval_data, seed=0).order[:n]
     sub = {k: v[order] for k, v in eval_data.items()}

@@ -39,17 +39,25 @@ data-parallel replicas and extends the same contract one level up:
     a single shard is bit-identical to ``update_batch``, and merging R
     shards equals serving the same samples unsharded in shard order.
 
+Distributed serving (serving/distributed.py) stacks the same contract
+one more level up: each process prepares its own hosts' shard summaries
+locally, all-gathers every host's summaries host-side (over the
+jax.distributed coordinator — no device collective), and every process
+folds the identical gathered list with ``merge_cross_host``, keeping all
+local controller mirrors bit-identical. Host count, like replica count,
+does not change the policy.
+
 ``update_batch`` is itself implemented as prepare-then-merge of one
 shard, so every serving path shares one update code path.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
-from repro.core.policy import BanditState, init_state, select_arm
+from repro.core.policy import BanditState, init_state
 from repro.core.rewards import CostModel
 
 
@@ -204,6 +212,28 @@ class SplitEEController:
         if not shards:
             return np.zeros(0, bool)
         return np.concatenate([s.exited for s in shards])
+
+    def merge_cross_host(
+            self,
+            per_host_shards: Sequence[Sequence[ShardUpdate]]) -> np.ndarray:
+        """Fold every host's shard summaries into the global state.
+
+        The cross-host level of the same all-reduce `merge_shard_updates`
+        performs across replicas: ``per_host_shards[h]`` is host h's
+        (possibly per-local-replica) shard summaries for one micro-batch,
+        and the fold flattens them in host order then replica order — the
+        same global sample order the single-process sharded runtime
+        folds, so the policy is invariant to how samples are split across
+        hosts AND replicas. Every host calls this with the identical
+        gathered summaries (serving/distributed.py ships them over the
+        jax.distributed coordinator), keeping all local controller
+        mirrors bit-identical without any device collective: the bandit
+        state is O(L) host-side scalars by design.
+
+        Returns the concatenated exit decisions in global sample order.
+        """
+        return self.merge_shard_updates(
+            [shard for host in per_host_shards for shard in host])
 
     def update_batch(self, arms: Sequence[int],
                      conf_paths: Sequence[np.ndarray],

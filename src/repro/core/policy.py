@@ -14,7 +14,6 @@ actually computed (documented deviation; exact when the sample offloads).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import NamedTuple
 

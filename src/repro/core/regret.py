@@ -1,7 +1,6 @@
 """Oracle + cumulative regret (paper eq. 3, Fig. 7)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.rewards import CostModel, oracle_arm

@@ -27,14 +27,11 @@ import time
 from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
 from repro.launch.mesh import axis_map, make_production_mesh
 from repro.launch.shardings import (batch_shardings, cache_shardings,
-                                    param_shardings, sharding_tree,
-                                    sanitize_spec)
+                                    param_shardings, sharding_tree)
 from repro.launch.train import make_train_step
 from repro.models.api import build_model
 from repro.optim import adamw_init

@@ -35,14 +35,20 @@ def make_serving_mesh(replicas: int = 1):
     whatever devices exist (CPU hosts included): on a CPU-only host, set
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax
     initializes to expose N host devices.
+
+    Only *local* devices back the mesh: in a multi-process deployment
+    (`jax.distributed` initialized, serving/distributed.py) each process
+    computes on its own devices and the cross-host reduction is the
+    host-side controller merge — a mesh spanning another process's
+    devices could not run this runtime's single-controller launches.
     """
     if replicas < 1:
         raise ValueError(f"replicas must be >= 1, got {replicas}")
-    devices = jax.devices()
+    devices = jax.local_devices()
     if replicas > len(devices):
         raise ValueError(
             f"requested {replicas} replicas but only {len(devices)} "
-            f"device(s) visible; on CPU set XLA_FLAGS="
+            f"local device(s) visible; on CPU set XLA_FLAGS="
             f"--xla_force_host_platform_device_count={replicas}")
     return Mesh(np.asarray(devices[:replicas]), ("data",))
 

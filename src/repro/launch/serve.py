@@ -3,13 +3,18 @@ then stream the (shifted) evaluation domain through the online SplitEE
 edge/cloud runtime — the paper's full pipeline (stages i-iii) end to end.
 
     PYTHONPATH=src python -m repro.launch.serve --samples 1500
+
+Multi-process serving spawns itself: ``--distributed --num-processes 2``
+re-executes this driver as 2 jax.distributed workers (forced host
+devices on CPU), each building the same deterministic testbed and
+serving its contiguous slice of every micro-batch
+(serving/distributed.py); host 0's summary is echoed.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-
-import numpy as np
+import os
 
 from repro.configs import get_smoke_config
 from repro.core import (CostModel, calibrate_alpha, confidence_cascade,
@@ -18,7 +23,11 @@ from repro.data import OnlineStream, make_dataset
 from repro.data.synthetic import DOMAINS, VOCAB
 from repro.launch.train import exit_accuracy, train_classifier
 from repro.serving import (EdgeCloudRuntime, serve_stream,
-                           serve_stream_batched, serve_stream_sharded)
+                           serve_stream_batched, serve_stream_distributed,
+                           serve_stream_sharded)
+from repro.serving.distributed import (ENV_COORDINATOR,
+                                       drive_respawned_cluster,
+                                       init_distributed_from_env)
 
 
 def build_testbed(*, layers: int = 6, steps: int = 300,
@@ -62,29 +71,66 @@ def main():
                          "that many visible devices; on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--no-overlap", action="store_true",
-                    help="with --mesh: disable the async offload queue "
-                         "(cloud flush resolves at its own batch boundary)")
+                    help="with --mesh/--distributed: disable the async "
+                         "offload queue (cloud flush resolves at its own "
+                         "batch boundary)")
+    ap.add_argument("--overlap-depth", type=int, default=1,
+                    help="max in-flight cloud flushes K for the async "
+                         "offload pipeline (1 = double buffering; "
+                         "feedback delay grows to <= (K+1)*B-1 rounds)")
+    ap.add_argument("--distributed", action="store_true",
+                    help="serve across jax.distributed processes "
+                         "(serving/distributed.py); spawns "
+                         "--num-processes workers when run outside a "
+                         "cluster (CPU hosts get forced host devices)")
+    ap.add_argument("--num-processes", type=int, default=2,
+                    help="worker count for --distributed self-spawn")
     args = ap.parse_args()
+
+    # worker mode iff the SPLITEE_* cluster env vars are present (set by
+    # respawn_distributed); must run before any other jax use
+    in_cluster = os.environ.get(ENV_COORDINATOR) is not None
+    if in_cluster:
+        init_distributed_from_env()
+    elif args.distributed:
+        drive_respawned_cluster(args.num_processes,
+                                devices_per_process=args.replicas)
+        return
+
+    import jax
+    host0 = (not in_cluster) or jax.process_index() == 0
 
     cfg, params, model, _, eval_data, (conf_val, correct_val), log = \
         build_testbed(layers=args.layers, steps=args.steps,
                       eval_domain=args.eval_domain)
-    print(f"trained multi-exit testbed: final loss {log[-1]['loss']:.4f}")
+    if host0:
+        print(f"trained multi-exit testbed: final loss {log[-1]['loss']:.4f}")
 
     cost = CostModel(num_layers=cfg.num_layers, offload=args.offload)
     alpha = calibrate_alpha(conf_val, cost, correct_val)
     cost = dataclasses.replace(cost, alpha=alpha)
-    print(f"calibrated alpha={alpha:.2f}")
+    if host0:
+        print(f"calibrated alpha={alpha:.2f}")
 
     runtime = EdgeCloudRuntime(cfg)
     stream = OnlineStream(eval_data, seed=0)
-    if args.mesh or args.replicas > 1:
+    if args.distributed or in_cluster:
+        out = serve_stream_distributed(runtime, params, stream, cost,
+                                       side_info=args.side_info,
+                                       batch_size=max(args.batch_size,
+                                                      args.replicas),
+                                       replicas=args.replicas,
+                                       overlap=not args.no_overlap,
+                                       overlap_depth=args.overlap_depth,
+                                       max_samples=args.samples)
+    elif args.mesh or args.replicas > 1:
         out = serve_stream_sharded(runtime, params, stream, cost,
                                    side_info=args.side_info,
                                    batch_size=max(args.batch_size,
                                                   args.replicas),
                                    replicas=args.replicas,
                                    overlap=not args.no_overlap,
+                                   overlap_depth=args.overlap_depth,
                                    max_samples=args.samples)
     elif args.batch_size > 1:
         out = serve_stream_batched(runtime, params, stream, cost,
@@ -95,12 +141,20 @@ def main():
         out = serve_stream(runtime, params, stream, cost,
                            side_info=args.side_info,
                            max_samples=args.samples)
+    if not host0:
+        return                      # one summary per cluster, from host 0
     variant = "SplitEE-S" if args.side_info else "SplitEE"
-    if args.mesh or args.replicas > 1:
+    if args.distributed or in_cluster:
+        ov = out["overlap"]
+        dist = out["distributed"]
+        variant += (f" (distributed H={dist['num_hosts']} "
+                    f"R={out['replicas']}/host B={out['batch_size']} "
+                    f"overlap={'K=%d' % ov['depth'] if ov['enabled'] else 'off'})")
+    elif args.mesh or args.replicas > 1:
         ov = out["overlap"]
         variant += (f" (sharded R={out['replicas']} "
                     f"B={out['batch_size']} overlap="
-                    f"{'on' if ov['enabled'] else 'off'})")
+                    f"{'K=%d' % ov['depth'] if ov['enabled'] else 'off'})")
     elif args.batch_size > 1:
         variant += f" (batched B={args.batch_size})"
     print(f"{variant}: n={out['n']} acc={out.get('accuracy', float('nan')):.3f} "

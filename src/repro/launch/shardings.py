@@ -16,14 +16,12 @@ the mesh (see core/controller.py).
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Dict
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import InputShape, ModelConfig
 from repro.sharding.rules import param_specs
 
 

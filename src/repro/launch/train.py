@@ -6,9 +6,8 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import functools
 import time
-from typing import Any, Dict
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -12,8 +12,6 @@ from the first token.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

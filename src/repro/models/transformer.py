@@ -16,7 +16,7 @@ layers). Enc-dec (seamless) wraps this module — see encdec.py.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

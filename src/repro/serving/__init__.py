@@ -10,3 +10,10 @@ from repro.serving.batched import (  # noqa: F401
 from repro.serving.sharded import (  # noqa: F401
     serve_stream_sharded,
 )
+from repro.serving.distributed import (  # noqa: F401
+    CoordinatorExchange,
+    LoopbackExchange,
+    init_distributed_from_env,
+    run_distributed_subprocesses,
+    serve_stream_distributed,
+)

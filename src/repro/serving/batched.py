@@ -77,8 +77,9 @@ class PendingFlush:
     the device, the Python call has already returned). ``resolve()``
     blocks on the device->host transfer and returns the
     ``{slot: (conf_L, pred_L)}`` map — deferring that call is what lets
-    the sharded runtime overlap batch t's cloud compute with batch
-    t+1's edge selection and launch.
+    the sharded and distributed runtimes keep up to ``depth`` batches of
+    cloud compute in flight behind later batches' edge selection and
+    launches (the pipeline ring in ``flush_async``).
     """
 
     def __init__(self, launches):
@@ -125,7 +126,11 @@ class OffloadQueue:
     launches but returns a `PendingFlush` whose ``resolve()`` the caller
     defers — the queue clears at dispatch time, so the next batch's rows
     accumulate into a fresh queue while the flushed launches are still in
-    flight. ``flush()`` is exactly ``flush_async().resolve()``.
+    flight. With ``depth=K`` the queue keeps a ring of in-flight
+    `PendingFlush` slots and force-resolves the oldest once more than K
+    are outstanding, so at most K flushes are ever in flight no matter
+    how long the caller defers. ``flush()`` is exactly
+    ``flush_async().resolve()``.
     """
 
     def __init__(self, runtime: EdgeCloudRuntime, params, *, put=None):
@@ -137,6 +142,7 @@ class OffloadQueue:
         self.put = put if put is not None else jnp.asarray
         self.rows: Dict[int, List[np.ndarray]] = {}   # depth -> [(S, D)]
         self.slots: Dict[int, List[int]] = {}
+        self.inflight: List[PendingFlush] = []        # flush_async ring
 
     def add_rows(self, depth: int, hidden_rows: np.ndarray,
                  slots: List[int]):
@@ -147,24 +153,40 @@ class OffloadQueue:
     def __len__(self):
         return sum(len(v) for v in self.slots.values())
 
-    def flush_async(self, *, min_rows: int = 1) -> PendingFlush:
+    def flush_async(self, *, min_rows: int = 1,
+                    depth: Optional[int] = None) -> PendingFlush:
         """Dispatch one `cloud_fn` launch per queued depth; don't block.
 
         ``min_rows`` sets the pad floor AND rounding multiple (the
         sharded runtime passes the replica count so every launch divides
         over the data axis).
+
+        ``depth`` bounds the flush pipeline: the returned `PendingFlush`
+        joins a ring of in-flight slots, and once more than ``depth``
+        are unresolved the oldest is resolved (blocking) in dispatch
+        order — FIFO, so the forced resolution is exactly the one the
+        caller would have performed next (``resolve`` is idempotent).
+        ``None`` leaves the ring unbounded (the caller owns resolution).
         """
+        if depth is not None and depth < 1:
+            raise ValueError(f"pipeline depth must be >= 1, got {depth}")
         launches = []
-        for depth in sorted(self.rows):
-            slots = self.slots[depth]
-            hidden = _pad_rows(np.stack(self.rows[depth]),
+        for d in sorted(self.rows):
+            slots = self.slots[d]
+            hidden = _pad_rows(np.stack(self.rows[d]),
                                _bucket_cap(len(slots), min_rows))
             conf_L, pred_L = self.runtime.cloud_fn(
-                self.params, self.put(hidden), jnp.int32(depth))
+                self.params, self.put(hidden), jnp.int32(d))
             launches.append((list(slots), conf_L, pred_L))
         self.rows.clear()
         self.slots.clear()
-        return PendingFlush(launches)
+        pending = PendingFlush(launches)
+        if depth is not None:
+            self.inflight = [p for p in self.inflight if not p.resolved]
+            self.inflight.append(pending)
+            while len(self.inflight) > depth:
+                self.inflight.pop(0).resolve()
+        return pending
 
     def flush(self) -> Dict[int, tuple]:
         return self.flush_async().resolve()

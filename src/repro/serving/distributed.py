@@ -1,0 +1,436 @@
+"""Multi-process distributed edge/cloud serving — per-host streams over
+`jax.distributed`, with the bandit merged host-side at batch boundaries.
+
+`serve_stream_sharded` (sharded.py) scales a micro-batch over the data
+axis of ONE process's mesh. This module is the step to a deployable
+multi-host shape: N processes (edge sites, or pods of a cloud cluster)
+each run the same deterministic serving schedule over their own local
+devices, and the controller is kept globally consistent without a single
+device collective.
+
+How one micro-batch flows, on every host simultaneously:
+
+  1. **select** — every process draws the full batch's arms from its
+     local `SplitEEController` mirror (`choose_splits` is deterministic,
+     and the mirrors are bit-identical by induction — see step 4 — so
+     all processes agree on every arm without communicating);
+  2. **shard** — the batch is split into contiguous per-host slices
+     (`_shard_sizes`, hosts in process-index order). A process runs
+     `batched._edge_phase` + its `OffloadQueue` only on its own slice,
+     over its own local mesh (`make_serving_mesh` uses
+     `jax.local_devices()`), with the same depth-``K`` flush pipeline
+     as the sharded runtime;
+  3. **exchange** — at fold time each process packs its slice summary
+     (`SplitEEController.prepare_shard_update` — pure, computed from the
+     frozen state — plus its slice's predictions) and all-gathers the
+     payloads through the jax.distributed coordinator's key-value store
+     (`CoordinatorExchange`): host-side bytes over the already-running
+     control plane, no NCCL/XLA collective, nothing on the accelerators;
+  4. **merge** — every process folds the identical gathered summaries
+     with `SplitEEController.merge_cross_host`, which replays the
+     sequential (q, n) arithmetic in host order then sample order. All
+     mirrors therefore stay bit-identical, and the policy is invariant
+     to the host count exactly as it is to the replica count.
+
+Offload pipelining is inherited unchanged: ``overlap_depth=K`` keeps up
+to K of a host's cloud flushes in flight behind later edge batches
+(feedback delay <= (K+1)*B - 1 rounds, asserted at every fold).
+
+Semantics: every process must be handed the SAME logical stream (same
+seed/order) — the per-host stream is its contiguous slice of every
+micro-batch. A 1-process run is bit-identical to `serve_stream_sharded`
+with the same arguments, and an N-process run is bit-identical to the
+single-process reference on the same stream (controller state, arms,
+exit decisions, predictions) — pinned by tests/test_serving_distributed.py
+via 2 subprocesses with forced host devices.
+
+On CPU-only hosts, drive it the same way the tests do: spawn workers
+with `run_distributed_subprocesses` (each gets
+``--xla_force_host_platform_device_count`` plus the SPLITEE_* cluster
+env vars) and call `init_distributed_from_env()` first thing in the
+worker, before any other jax use.
+"""
+from __future__ import annotations
+
+import io
+import os
+import socket
+import subprocess
+import sys
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.controller import ShardUpdate, SplitEEController
+from repro.core.rewards import CostModel
+from repro.launch.mesh import make_serving_mesh
+from repro.launch.shardings import param_shardings
+from repro.serving.batched import OffloadQueue, _edge_phase
+from repro.serving.sharded import (_BatchCtx, _data_put, _drive_pipeline,
+                                   _resolve_cloud, _serve_result,
+                                   _shard_sizes)
+from repro.serving.simulator import EdgeCloudRuntime
+
+# Cluster topology env vars understood by `init_distributed_from_env`
+# (set for every worker by `run_distributed_subprocesses`).
+ENV_COORDINATOR = "SPLITEE_COORDINATOR"
+ENV_NUM_PROCESSES = "SPLITEE_NUM_PROCESSES"
+ENV_PROCESS_ID = "SPLITEE_PROCESS_ID"
+
+
+def init_distributed_from_env() -> bool:
+    """Initialize `jax.distributed` from the SPLITEE_* env vars, if set.
+
+    Call before any other jax API in a worker process (device topology is
+    fixed at backend init). Returns True when a multi-process cluster was
+    joined, False when the env vars are absent (plain single-process run).
+    """
+    coord = os.environ.get(ENV_COORDINATOR)
+    if not coord:
+        return False
+    num = int(os.environ[ENV_NUM_PROCESSES])
+    pid = int(os.environ[ENV_PROCESS_ID])
+    jax.distributed.initialize(coordinator_address=coord,
+                               num_processes=num, process_id=pid)
+    return num > 1
+
+
+class LoopbackExchange:
+    """Single-host stand-in: the gather of one host's payload is itself."""
+
+    num_hosts = 1
+    host_id = 0
+
+    def allgather_bytes(self, payload: bytes) -> List[bytes]:
+        return [payload]
+
+    def close(self):
+        pass
+
+
+_EXCHANGE_EPOCH = [0]   # distinct KV namespace per exchange instance
+
+
+class CoordinatorExchange:
+    """Host-side all-gather over the jax.distributed coordinator KV store.
+
+    The coordinator (already running: it bootstrapped the cluster) doubles
+    as the control-plane transport for the O(B*L) bandit summaries — no
+    device collective, so CPU-only processes and heterogeneous edge hosts
+    work the same as TPU pods. Rounds are strictly ordered: every host
+    calls ``allgather_bytes`` the same number of times in the same batch
+    order (the serving schedule is deterministic), and each call blocks
+    until all hosts' round-r payloads are present.
+
+    Keys are garbage-collected one round behind: completing the gather of
+    round r proves every host has written round r, hence finished reading
+    round r-1, so a host's own r-1 key is safely deletable. The final
+    round's keys are removed by ``close()`` behind a coordinator barrier.
+
+    Each instance claims a fresh epoch namespace (all hosts construct
+    their exchanges in the same deterministic order, so epochs agree) —
+    back-to-back serving passes on one cluster never collide on keys.
+    """
+
+    def __init__(self, *, prefix: str = "splitee/xhost",
+                 timeout_ms: int = 300_000):
+        from jax._src.distributed import global_state
+        if global_state.client is None:
+            raise RuntimeError(
+                "jax.distributed is not initialized — call "
+                "init_distributed_from_env() (or jax.distributed."
+                "initialize) before serving distributed")
+        self._client = global_state.client
+        self._prefix = f"{prefix}/{_EXCHANGE_EPOCH[0]}"
+        _EXCHANGE_EPOCH[0] += 1
+        self._timeout_ms = timeout_ms
+        self._round = 0
+        self.num_hosts = jax.process_count()
+        self.host_id = jax.process_index()
+
+    def allgather_bytes(self, payload: bytes) -> List[bytes]:
+        r = self._round
+        self._round += 1
+        self._client.key_value_set_bytes(
+            f"{self._prefix}/{r}/{self.host_id}", payload)
+        out = [payload if h == self.host_id else
+               self._client.blocking_key_value_get_bytes(
+                   f"{self._prefix}/{r}/{h}", self._timeout_ms)
+               for h in range(self.num_hosts)]
+        if r > 0:
+            self._client.key_value_delete(
+                f"{self._prefix}/{r - 1}/{self.host_id}")
+        return out
+
+    def close(self):
+        """Delete this epoch's final-round keys (barrier: every host must
+        have read them before anyone deletes)."""
+        if self._round == 0:
+            return
+        self._client.wait_at_barrier(f"{self._prefix}/close",
+                                     self._timeout_ms)
+        self._client.key_value_delete(
+            f"{self._prefix}/{self._round - 1}/{self.host_id}")
+
+
+def _pack_host_update(shard: ShardUpdate, preds: np.ndarray) -> bytes:
+    """One host's per-batch wire payload: shard summary + predictions."""
+    buf = io.BytesIO()
+    np.savez(buf, arms=shard.arms, rewards=shard.rewards,
+             exited=shard.exited, costs=shard.costs,
+             offload_bytes=shard.offload_bytes,
+             preds=np.asarray(preds, np.int64))
+    return buf.getvalue()
+
+
+def _unpack_host_update(raw: bytes) -> Tuple[ShardUpdate, np.ndarray]:
+    z = np.load(io.BytesIO(raw))
+    shard = ShardUpdate(arms=z["arms"], rewards=z["rewards"],
+                        exited=z["exited"], costs=z["costs"],
+                        offload_bytes=z["offload_bytes"])
+    return shard, z["preds"]
+
+
+def serve_stream_distributed(runtime: EdgeCloudRuntime, params, stream,
+                             cost: CostModel, *, batch_size: int = 32,
+                             replicas: int = 1, mesh: Optional[Mesh] = None,
+                             overlap: bool = True, overlap_depth: int = 1,
+                             side_info: bool = False, beta: float = 1.0,
+                             max_samples: int = 0,
+                             labels_for_accounting: bool = True,
+                             exchange=None) -> Dict[str, Any]:
+    """Serve a sample stream across all processes of a jax.distributed run.
+
+    Same contract as `serve_stream_sharded` — ``replicas`` is the
+    PER-HOST local replica count, ``overlap``/``overlap_depth`` the flush
+    pipeline — with the batch additionally sliced across processes. Must
+    be called by EVERY process with the same logical stream and
+    arguments; returns the same global result dict on each (plus a
+    ``"distributed"`` section), since every process folds the identical
+    gathered statistics.
+
+    ``exchange``  cross-host transport (testing hook). Defaults to
+                  `CoordinatorExchange` in a multi-process run and
+                  `LoopbackExchange` in a single-process one.
+    """
+    if overlap_depth < 1:
+        raise ValueError(f"overlap_depth must be >= 1, got {overlap_depth}")
+    if exchange is None:
+        exchange = (CoordinatorExchange() if jax.process_count() > 1
+                    else LoopbackExchange())
+    num_hosts = exchange.num_hosts
+    host_id = exchange.host_id
+
+    if mesh is None:
+        mesh = make_serving_mesh(replicas)
+    put = _data_put(mesh)
+    amap = {"model": "model" if "model" in mesh.axis_names else None,
+            "fsdp": None}
+    params = jax.device_put(params,
+                            param_shardings(mesh, params, axis_map=amap))
+
+    ctl = SplitEEController(cost, beta=beta, side_info=side_info)
+    queue = OffloadQueue(runtime, params, put=put)
+    correct, preds = [], []
+    n = 0
+    overlapped = 0
+
+    def process_batch(batch, start: int) -> _BatchCtx:
+        """Select the full batch's arms; launch only my host's slice."""
+        B = len(batch)
+        arms = ctl.choose_splits(B)          # identical on every host
+        # contiguous per-host slice of this batch — only my rows are
+        # ever materialized (other hosts' samples stay untouched)
+        sizes = _shard_sizes(B, num_hosts)
+        lo = sum(sizes[:host_id])
+        hi = lo + sizes[host_id]
+        seq_len = int(np.asarray(batch[0]["tokens"]).shape[-1])
+        if hi > lo:
+            tokens = np.stack([np.asarray(s["tokens"])
+                               for s in batch[lo:hi]])
+        else:                        # batch smaller than the host count
+            tokens = np.zeros((0, seq_len), np.int32)
+
+        conf_paths, batch_preds = _edge_phase(
+            runtime, params, tokens, arms[lo:hi], cost, queue,
+            side_info=side_info, put=put, replicas=replicas)
+
+        pending = queue.flush_async(
+            min_rows=replicas, depth=overlap_depth if overlap else None)
+        labels = [int(s["labels"]) if "labels" in s else None
+                  for s in batch]
+        return _BatchCtx(arms=arms[lo:hi], conf_paths=conf_paths,
+                         batch_preds=batch_preds, labels=labels,
+                         seq_len=seq_len, pending=pending, start=start)
+
+    def finalize(ctx: _BatchCtx):
+        """Resolve the local flush, exchange summaries, fold all hosts."""
+        nonlocal n, overlapped
+        B = len(ctx.labels)
+        # my slice's cloud results (slots are slice-local indices)
+        conf_Ls, obs = _resolve_cloud(runtime, ctx)
+        shard = ctl.prepare_shard_update(ctx.arms, ctx.conf_paths,
+                                         conf_Ls, obs)
+        # host-side all-gather, then the identical fold on every process
+        payloads = exchange.allgather_bytes(
+            _pack_host_update(shard, np.asarray(ctx.batch_preds, np.int64)))
+        unpacked = [_unpack_host_update(p) for p in payloads]
+        ctl.merge_cross_host([[shard] for shard, _ in unpacked])
+        batch_preds = [int(p) for _, host_preds in unpacked
+                       for p in host_preds]
+        assert len(batch_preds) == B
+        preds.extend(batch_preds)
+        if labels_for_accounting:
+            for s in range(B):
+                if ctx.labels[s] is not None:
+                    correct.append(int(batch_preds[s] == ctx.labels[s]))
+        if ctx.overlapped:
+            overlapped += 1
+        n += B
+
+    batches = _drive_pipeline(
+        stream, batch_size=batch_size, max_samples=max_samples,
+        overlap=overlap, overlap_depth=overlap_depth,
+        process_batch=process_batch, finalize=finalize)
+    exchange.close()
+
+    out = _serve_result(ctl, n=n, batch_size=batch_size, replicas=replicas,
+                        preds=preds, correct=correct, overlap=overlap,
+                        overlap_depth=overlap_depth, batches=batches,
+                        overlapped=overlapped)
+    out["distributed"] = {"num_hosts": num_hosts, "host_id": host_id,
+                          "local_replicas": replicas}
+    return out
+
+
+# --------------------------------------------------------------------------
+# subprocess cluster driver (CPU hosts / tests / benchmarks)
+# --------------------------------------------------------------------------
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        return s.getsockname()[1]
+
+
+def run_distributed_subprocesses(
+        worker_src: str, num_processes: int, *,
+        devices_per_process: int = 1, env: Optional[Dict[str, str]] = None,
+        timeout: Optional[float] = 900.0, cwd: Optional[str] = None,
+) -> List[subprocess.CompletedProcess]:
+    """Spawn N python workers wired into one localhost jax.distributed run.
+
+    Each worker executes ``worker_src`` (a `python -c` program that must
+    call `init_distributed_from_env()` before touching jax) with the
+    SPLITEE_* cluster vars set and, on CPU hosts, forced host devices
+    (``--xla_force_host_platform_device_count=devices_per_process`` —
+    the same trick tests/test_serving_sharded.py uses, which must land
+    in XLA_FLAGS before jax initializes, hence env-at-spawn). Returns
+    one CompletedProcess per worker, in process-id order.
+
+    ``timeout`` is per cluster, in seconds; ``None`` waits indefinitely
+    (interactive drivers). All workers' pipes are drained concurrently —
+    a worker stalled on a full pipe would stop answering the KV-store
+    exchange and wedge every other worker with it. A worker exiting
+    non-zero fails fast: the survivors can never complete the exchange
+    (they would block until their KV timeouts), so they are killed
+    immediately and the crash surfaces in seconds, not minutes.
+    """
+    port = _free_port()
+    procs: List[subprocess.Popen] = []
+    for pid in range(num_processes):
+        penv = dict(os.environ)
+        penv.update(env or {})
+        penv[ENV_COORDINATOR] = f"localhost:{port}"
+        penv[ENV_NUM_PROCESSES] = str(num_processes)
+        penv[ENV_PROCESS_ID] = str(pid)
+        xla = penv.get("XLA_FLAGS", "")
+        if "--xla_force_host_platform_device_count" not in xla:
+            penv["XLA_FLAGS"] = (
+                xla + " --xla_force_host_platform_device_count"
+                f"={devices_per_process}").strip()
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", worker_src], env=penv, cwd=cwd,
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True))
+
+    results: List[Optional[tuple]] = [None] * num_processes
+
+    def drain(i: int, p: subprocess.Popen):
+        stdout, stderr = p.communicate()   # returns once p exits/is killed
+        results[i] = (p.returncode, stdout, stderr)
+
+    threads = [threading.Thread(target=drain, args=(i, p), daemon=True)
+               for i, p in enumerate(procs)]
+    for t in threads:
+        t.start()
+
+    deadline = None if timeout is None else time.monotonic() + timeout
+    timed_out = False
+    while True:
+        states = [p.poll() for p in procs]
+        if all(s is not None for s in states):
+            break
+        if any(s is not None and s != 0 for s in states):
+            # fail fast: a crashed worker can never answer the exchange
+            time.sleep(0.5)            # let its last writes flush
+            for q in procs:
+                if q.poll() is None:
+                    q.kill()
+            break
+        if deadline is not None and time.monotonic() > deadline:
+            timed_out = True
+            for q in procs:
+                q.kill()
+            break
+        time.sleep(0.2)
+    for t in threads:
+        t.join()
+    if timed_out:
+        raise subprocess.TimeoutExpired(procs[0].args, timeout or 0)
+    return [subprocess.CompletedProcess(p.args, rc, out, err)
+            for p, (rc, out, err) in zip(procs, results)]
+
+
+def respawn_distributed(num_processes: int, *, devices_per_process: int = 1,
+                        timeout: Optional[float] = None,
+                        ) -> List[subprocess.CompletedProcess]:
+    """Re-run the current program as an N-process distributed cluster.
+
+    The driver-mode path of `launch/serve.py --distributed` and
+    `examples/serve_splitee.py --distributed`: each worker re-executes
+    ``sys.argv`` verbatim (same flags, same deterministic testbed build)
+    and detects worker mode via the SPLITEE_* env vars, so the program
+    needs no separate worker entry point. No timeout by default —
+    workers retrain the testbed, whose duration depends on the flags
+    being relayed; interrupt the driver to kill the cluster instead.
+    """
+    argv = list(sys.argv)
+    worker_src = (
+        "import sys, runpy; "
+        f"sys.argv = {argv!r}; "
+        f"runpy.run_path({os.path.abspath(argv[0])!r}, "
+        "run_name='__main__')")
+    return run_distributed_subprocesses(
+        worker_src, num_processes,
+        devices_per_process=devices_per_process, timeout=timeout)
+
+
+def drive_respawned_cluster(num_processes: int, *,
+                            devices_per_process: int = 1):
+    """`respawn_distributed` + the standard driver epilogue: abort with
+    the failing worker's stderr if any worker exits non-zero, otherwise
+    echo host 0's output (workers gate their own prints to host 0)."""
+    procs = respawn_distributed(num_processes,
+                                devices_per_process=devices_per_process)
+    failed = [(i, p) for i, p in enumerate(procs) if p.returncode != 0]
+    if failed:
+        # workers killed by the fail-fast sweep show a signal returncode;
+        # the crashed worker's own stderr carries the root cause
+        raise SystemExit("\n".join(
+            f"worker {i} exited {p.returncode}:\n{p.stderr[-3000:]}"
+            for i, p in failed))
+    print(procs[0].stdout, end="")

@@ -25,22 +25,27 @@ flush. This module scales the same pipeline out and overlaps it:
     batch boundary — the host-side all-reduce. The fold replays the
     sequential arithmetic, so replica count does NOT change the policy:
     R shards merge bit-identically to the unsharded batch update.
-  * **async offload (double buffering)** — with ``overlap=True`` the
+  * **async offload (depth-K pipeline)** — with ``overlap=True`` the
     batched `cloud_fn` flush for batch t is *dispatched*
-    (`OffloadQueue.flush_async`, no block) and resolved only after batch
-    t+1's arms are selected and its edge buckets launched. Feedback for
-    batch t therefore lands one batch later than in the synchronous
-    path: delay grows from at most B-1 rounds to at most 2B-1 — still
-    the additive-regret delayed-feedback regime (Joulani et al., 2013).
-    The result dict records the overlap under ``"overlap"``.
+    (`OffloadQueue.flush_async`, no block) and resolved only after up to
+    ``overlap_depth`` later batches have selected their arms and
+    launched their edge buckets. The queue keeps a ring of in-flight
+    `PendingFlush` slots, so up to K cloud flushes proceed concurrently
+    with edge work. Feedback for batch t therefore lands K batches later
+    than in the synchronous path: delay grows from at most B-1 rounds to
+    at most (K+1)·B-1 (asserted at every fold) — still the
+    additive-regret delayed-feedback regime (Joulani et al., 2013).
+    ``overlap_depth=1`` is classic double buffering. The result dict
+    records the pipeline under ``"overlap"``.
 
 Semantics: with ``replicas=1`` and ``overlap=False`` this path is
 **bit-identical** to `serve_stream_batched` (pinned by the differential
 test in tests/test_serving_sharded.py). Overlap changes *when* updates
-land (one batch later); replicas change only *where* compute runs.
+land (K batches later); replicas change only *where* compute runs.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any, Dict, List, Optional
 
@@ -81,13 +86,113 @@ class _BatchCtx:
     labels: List[Optional[int]]
     seq_len: int
     pending: Any                      # PendingFlush
+    start: int = 0                    # global round index of first sample
     overlapped: bool = False
+
+
+def _drive_pipeline(stream, *, batch_size: int, max_samples: int,
+                    overlap: bool, overlap_depth: int,
+                    process_batch, finalize) -> int:
+    """The depth-K serving schedule shared by the sharded and distributed
+    runtimes: ``process_batch(batch, start)`` selects arms and dispatches
+    one micro-batch's edge work + cloud flush (returning its _BatchCtx),
+    up to ``overlap_depth`` contexts stay in flight, and ``finalize``
+    folds them FIFO. Asserts the feedback-delay bound <= (K+1)*B - 1 at
+    every fold. Returns the batch count.
+
+    The in-flight bound is enforced at two cooperating levels with the
+    same K: this deque bounds *fold order* (controller updates land
+    FIFO), while the queue's ``flush_async(depth=K)`` ring bounds the
+    *device work itself* — a backstop that holds even for callers that
+    defer resolution indefinitely. Both resolve the same PendingFlush
+    objects FIFO and ``resolve`` is idempotent, so whichever fires first
+    the results are identical; only where blocking happens shifts.
+    """
+    inflight: collections.deque[_BatchCtx] = collections.deque()
+    selected = 0                       # arms drawn so far (global rounds)
+    batches = 0
+    depth_eff = overlap_depth if overlap else 0
+
+    def fold(ctx: _BatchCtx):
+        # feedback-delay bound: the oldest sample of this batch has seen
+        # at most (K+1)*B - 1 later selections before its update lands.
+        assert selected - 1 - ctx.start <= (depth_eff + 1) * batch_size - 1, (
+            f"feedback delay {selected - 1 - ctx.start} exceeds "
+            f"(K+1)*B-1 = {(depth_eff + 1) * batch_size - 1}")
+        finalize(ctx)
+
+    for batch in microbatches(stream, batch_size, max_samples):
+        ctx = process_batch(batch, selected)
+        selected += len(batch)
+        batches += 1
+        if overlap:
+            # depth-K pipeline: cloud launches from the last up-to-K
+            # batches stay in flight behind this batch's edge phase;
+            # once the ring is full the oldest resolves and folds.
+            inflight.append(ctx)
+            while len(inflight) > overlap_depth:
+                oldest = inflight.popleft()
+                oldest.overlapped = True
+                fold(oldest)
+        else:
+            fold(ctx)
+    while inflight:                    # final drain, FIFO
+        ctx = inflight.popleft()
+        # all but the stream's last in-flight batch had later edge work
+        # dispatched behind them
+        ctx.overlapped = bool(inflight)
+        fold(ctx)
+    return batches
+
+
+def _resolve_cloud(runtime: EdgeCloudRuntime, ctx: _BatchCtx):
+    """Resolve ctx's cloud flush: patch cloud predictions into
+    ``ctx.batch_preds`` and return (conf_Ls, offload_bytes) per slot."""
+    size = len(ctx.arms)
+    cloud = ctx.pending.resolve()
+    conf_Ls: List[Optional[float]] = [None] * size
+    ob = runtime.offload_bytes(1, ctx.seq_len)
+    obs = [0] * size
+    for s, (c_L, p_L) in cloud.items():
+        conf_Ls[s] = c_L
+        ctx.batch_preds[s] = p_L
+        obs[s] = ob
+    return conf_Ls, obs
+
+
+def _serve_result(ctl: SplitEEController, *, n: int, batch_size: int,
+                  replicas: int, preds, correct, overlap: bool,
+                  overlap_depth: int, batches: int,
+                  overlapped: int) -> Dict[str, Any]:
+    """Result dict shared by the sharded and distributed runtimes."""
+    hist = {k: np.asarray(v) for k, v in ctl.history.items()}
+    out = {
+        "n": n,
+        "batch_size": batch_size,
+        "replicas": replicas,
+        "preds": np.asarray(preds),
+        "cost_total": float(hist["cost"].sum()),
+        "offload_frac": float(1.0 - hist["exited"].mean()) if n else 0.0,
+        "offload_bytes": int(hist["offload_bytes"].sum()),
+        "arms": hist["arm"],
+        "rewards": hist["reward"],
+        "exited": hist["exited"],
+        "overlap": {"enabled": overlap, "depth": overlap_depth,
+                    "batches": batches, "batches_overlapped": overlapped},
+        "state": {"q": np.asarray(ctl.state.q).copy(),
+                  "n": np.asarray(ctl.state.n).copy(),
+                  "t": int(ctl.state.t)},
+    }
+    if correct:
+        out["accuracy"] = float(np.mean(correct))
+    return out
 
 
 def serve_stream_sharded(runtime: EdgeCloudRuntime, params, stream,
                          cost: CostModel, *, batch_size: int = 32,
                          replicas: int = 1, mesh: Optional[Mesh] = None,
-                         overlap: bool = True, side_info: bool = False,
+                         overlap: bool = True, overlap_depth: int = 1,
+                         side_info: bool = False,
                          beta: float = 1.0, max_samples: int = 0,
                          labels_for_accounting: bool = True,
                          record_trace: bool = False) -> Dict[str, Any]:
@@ -100,13 +205,20 @@ def serve_stream_sharded(runtime: EdgeCloudRuntime, params, stream,
                   devices is built when ``mesh`` is None).
     ``mesh``      explicit mesh with a "data" axis (and optionally a
                   "model" axis, which param placement honors).
-    ``overlap``   double-buffer the offload queue: batch t's cloud
-                  flush is resolved only after batch t+1's edge work is
-                  dispatched. Off: cloud resolves at t's own boundary,
-                  reproducing the synchronous batched semantics.
+    ``overlap``   pipeline the offload queue: batch t's cloud flush is
+                  resolved only after up to ``overlap_depth`` later
+                  batches have dispatched their edge work. Off: cloud
+                  resolves at t's own boundary, reproducing the
+                  synchronous batched semantics.
+    ``overlap_depth``  max in-flight cloud flushes K (>= 1). K=1 is
+                  double buffering; larger K hides longer cloud
+                  latencies at the price of feedback delayed by up to
+                  (K+1)*B-1 rounds (asserted at every fold).
     """
     if replicas < 1:
         raise ValueError(f"replicas must be >= 1, got {replicas}")
+    if overlap_depth < 1:
+        raise ValueError(f"overlap_depth must be >= 1, got {overlap_depth}")
     if mesh is None:
         mesh = make_serving_mesh(replicas)
     if "data" not in mesh.axis_names:
@@ -127,21 +239,34 @@ def serve_stream_sharded(runtime: EdgeCloudRuntime, params, stream,
     trace: Optional[Dict[str, list]] = (
         {"conf_path": [], "conf_L": []} if record_trace else None)
     n = 0
-    batches = 0
     overlapped = 0
+
+    def process_batch(batch, start: int) -> _BatchCtx:
+        """Select arms, launch the batch's edge buckets, dispatch flush."""
+        B = len(batch)
+        arms = ctl.choose_splits(B)
+        tokens = np.stack([np.asarray(s["tokens"]) for s in batch])
+
+        # ---- edge: one data-parallel launch per distinct chosen depth --
+        conf_paths, batch_preds = _edge_phase(
+            runtime, params, tokens, arms, cost, queue,
+            side_info=side_info, put=put, replicas=replicas)
+
+        # ---- cloud: dispatch the flush; resolve now or K batches later -
+        pending = queue.flush_async(
+            min_rows=replicas, depth=overlap_depth if overlap else None)
+        labels = [int(s["labels"]) if "labels" in s else None
+                  for s in batch]
+        return _BatchCtx(arms=arms, conf_paths=conf_paths,
+                         batch_preds=batch_preds, labels=labels,
+                         seq_len=tokens.shape[1], pending=pending,
+                         start=start)
 
     def finalize(ctx: _BatchCtx):
         """Resolve the cloud flush, merge per-replica stats, book results."""
         nonlocal n, overlapped
         B = len(ctx.arms)
-        cloud = ctx.pending.resolve()
-        conf_Ls: List[Optional[float]] = [None] * B
-        ob = runtime.offload_bytes(1, ctx.seq_len)
-        obs = [0] * B
-        for s, (c_L, p_L) in cloud.items():
-            conf_Ls[s] = c_L
-            ctx.batch_preds[s] = p_L
-            obs[s] = ob
+        conf_Ls, obs = _resolve_cloud(runtime, ctx)
         # per-replica shard summaries, merged at the batch boundary
         shards = []
         lo = 0
@@ -165,55 +290,15 @@ def serve_stream_sharded(runtime: EdgeCloudRuntime, params, stream,
             overlapped += 1
         n += B
 
-    inflight: Optional[_BatchCtx] = None
-    for batch in microbatches(stream, batch_size, max_samples):
-        B = len(batch)
-        arms = ctl.choose_splits(B)
-        tokens = np.stack([np.asarray(s["tokens"]) for s in batch])
-        seq_len = tokens.shape[1]
+    batches = _drive_pipeline(
+        stream, batch_size=batch_size, max_samples=max_samples,
+        overlap=overlap, overlap_depth=overlap_depth,
+        process_batch=process_batch, finalize=finalize)
 
-        # ---- edge: one data-parallel launch per distinct chosen depth --
-        conf_paths, batch_preds = _edge_phase(
-            runtime, params, tokens, arms, cost, queue,
-            side_info=side_info, put=put, replicas=replicas)
-
-        # ---- cloud: dispatch the flush; resolve now or next iteration --
-        pending = queue.flush_async(min_rows=replicas)
-        labels = [int(s["labels"]) if "labels" in s else None
-                  for s in batch]
-        ctx = _BatchCtx(arms=arms, conf_paths=conf_paths,
-                        batch_preds=batch_preds, labels=labels,
-                        seq_len=seq_len, pending=pending)
-        batches += 1
-        if overlap:
-            # double buffer: the previous batch's cloud launches have
-            # been in flight for this whole edge phase — resolve them
-            # now, then leave this batch's flush pending.
-            if inflight is not None:
-                inflight.overlapped = True
-                finalize(inflight)
-            inflight = ctx
-        else:
-            finalize(ctx)
-    if inflight is not None:
-        finalize(inflight)
-
-    hist = {k: np.asarray(v) for k, v in ctl.history.items()}
-    out = {
-        "n": n,
-        "batch_size": batch_size,
-        "replicas": replicas,
-        "preds": np.asarray(preds),
-        "cost_total": float(hist["cost"].sum()),
-        "offload_frac": float(1.0 - hist["exited"].mean()) if n else 0.0,
-        "offload_bytes": int(hist["offload_bytes"].sum()),
-        "arms": hist["arm"],
-        "rewards": hist["reward"],
-        "overlap": {"enabled": overlap, "batches": batches,
-                    "batches_overlapped": overlapped},
-    }
-    if correct:
-        out["accuracy"] = float(np.mean(correct))
+    out = _serve_result(ctl, n=n, batch_size=batch_size, replicas=replicas,
+                        preds=preds, correct=correct, overlap=overlap,
+                        overlap_depth=overlap_depth, batches=batches,
+                        overlapped=overlapped)
     if trace is not None:
         out["trace"] = trace
     return out

@@ -20,8 +20,7 @@ SplitEE-S additionally reads the exits *below* depth; the runtime exposes
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

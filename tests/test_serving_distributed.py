@@ -1,0 +1,211 @@
+"""Differential tests for the multi-process distributed serving runtime.
+
+Pins serving/distributed.py to its references:
+
+* `merge_cross_host` folding hosts x shards == `update_batch` on the
+  concatenated batch, bitwise (state, history);
+* wire roundtrip: pack/unpack of a host's per-batch payload is lossless;
+* 1 host (loopback exchange, in-process) -> bit-identical to
+  `serve_stream_sharded` at every overlap depth;
+* a REAL 2-process jax.distributed run (subprocess workers with forced
+  host devices, coordinator KV-store exchange) -> bit-identical
+  controller state, arms, exit decisions and predictions vs the
+  single-process sharded reference on the same stream.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import CostModel, SplitEEController
+from repro.data import OnlineStream, make_dataset
+from repro.data.synthetic import VOCAB
+from repro.serving import (EdgeCloudRuntime, run_distributed_subprocesses,
+                           serve_stream_distributed, serve_stream_sharded)
+from repro.serving.distributed import (_pack_host_update,
+                                       _unpack_host_update)
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _testbed(num_layers=3, d_model=32, seed=0):
+    import jax
+    from repro.models.api import build_model
+    base = get_smoke_config("elasticbert12")
+    cfg = dataclasses.replace(
+        base, num_layers=num_layers, d_model=d_model, num_heads=2,
+        num_kv_heads=2, d_ff=128, vocab_size=VOCAB, num_classes=2,
+        dtype="float32")
+    params = build_model(cfg).init(jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+# ------------------------------------------------- controller / wire unit
+
+@pytest.mark.parametrize("side_info", [False, True])
+@pytest.mark.parametrize("hosts", [(12,), (7, 5), (4, 4, 4), (1, 10, 1)])
+def test_merge_cross_host_equals_update_batch(side_info, hosts):
+    """Host count must not change the policy: folding per-host shard
+    summaries in host order == the unsharded batch update, bitwise."""
+    L = 5
+    cost = CostModel(num_layers=L, alpha=0.7, offload=4.0)
+    rng = np.random.default_rng(7)
+    B = sum(hosts)
+    arms = rng.integers(0, L, B)
+    paths = [rng.uniform(0.05, 0.99, int(a) + 1) if side_info
+             else rng.uniform(0.05, 0.99, 1) for a in arms]
+    confL = [None if rng.random() < 0.5 else float(rng.uniform(0.3, 0.99))
+             for _ in range(B)]
+    obs = list(rng.integers(0, 10_000, B))
+
+    ref = SplitEEController(cost, side_info=side_info)
+    ref.update_batch(arms, paths, confL, obs)
+
+    got = SplitEEController(cost, side_info=side_info)
+    per_host, lo = [], 0
+    for size in hosts:
+        hi = lo + size
+        per_host.append([got.prepare_shard_update(
+            arms[lo:hi], paths[lo:hi], confL[lo:hi], obs[lo:hi])])
+        lo = hi
+    exited = got.merge_cross_host(per_host)
+
+    assert exited.shape == (B,)
+    np.testing.assert_array_equal(np.asarray(got.state.q),
+                                  np.asarray(ref.state.q))
+    np.testing.assert_array_equal(np.asarray(got.state.n),
+                                  np.asarray(ref.state.n))
+    assert int(got.state.t) == int(ref.state.t)
+    for key in ref.history:
+        assert got.history[key] == ref.history[key], key
+
+
+def test_host_update_wire_roundtrip():
+    cost = CostModel(num_layers=4, alpha=0.7, offload=2.0)
+    ctl = SplitEEController(cost)
+    shard = ctl.prepare_shard_update(
+        [1, 3], [np.asarray([0.9]), np.asarray([0.4])], [None, 0.8],
+        [0, 4096])
+    preds = np.asarray([1, 0], np.int64)
+    back, preds_back = _unpack_host_update(_pack_host_update(shard, preds))
+    for field in ("arms", "rewards", "exited", "costs", "offload_bytes"):
+        np.testing.assert_array_equal(getattr(back, field),
+                                      getattr(shard, field))
+    np.testing.assert_array_equal(preds_back, preds)
+
+
+# --------------------------------------- 1-host loopback == sharded path
+
+@pytest.mark.parametrize("overlap,depth", [(False, 1), (True, 1), (True, 2)])
+def test_single_host_bit_identical_to_sharded(overlap, depth):
+    """With one host the distributed runtime must reproduce the sharded
+    runtime exactly — the loopback exchange and cross-host fold are
+    numerics-free."""
+    cfg, params = _testbed()
+    eval_data = make_dataset("imdb_like", 128, seed=2, seq_len=16)
+    rt = EdgeCloudRuntime(cfg)
+    cost = CostModel(num_layers=cfg.num_layers, alpha=0.6, offload=3.0)
+    kw = dict(batch_size=16, max_samples=96, replicas=1,
+              overlap=overlap, overlap_depth=depth)
+    ref = serve_stream_sharded(rt, params, OnlineStream(eval_data, seed=0),
+                               cost, **kw)
+    got = serve_stream_distributed(rt, params,
+                                   OnlineStream(eval_data, seed=0),
+                                   cost, **kw)
+    assert got["n"] == ref["n"]
+    np.testing.assert_array_equal(got["arms"], ref["arms"])
+    np.testing.assert_array_equal(got["preds"], ref["preds"])
+    np.testing.assert_array_equal(got["rewards"], ref["rewards"])
+    np.testing.assert_array_equal(got["exited"], ref["exited"])
+    assert got["cost_total"] == ref["cost_total"]
+    assert got["offload_bytes"] == ref["offload_bytes"]
+    np.testing.assert_array_equal(got["state"]["q"], ref["state"]["q"])
+    np.testing.assert_array_equal(got["state"]["n"], ref["state"]["n"])
+    assert got["state"]["t"] == ref["state"]["t"]
+    assert got["distributed"] == {"num_hosts": 1, "host_id": 0,
+                                  "local_replicas": 1}
+    assert got["overlap"] == ref["overlap"]
+
+
+# ------------------------------------ 2-process jax.distributed execution
+
+_DIST_WORKER = """
+import dataclasses, json
+from repro.serving import init_distributed_from_env
+init_distributed_from_env()
+import jax
+import numpy as np
+from repro.configs import get_smoke_config
+from repro.core import CostModel
+from repro.data import OnlineStream, make_dataset
+from repro.data.synthetic import VOCAB
+from repro.models.api import build_model
+from repro.serving import EdgeCloudRuntime, serve_stream_distributed
+
+assert jax.process_count() == 2, jax.process_count()
+base = get_smoke_config("elasticbert12")
+cfg = dataclasses.replace(
+    base, num_layers=3, d_model=32, num_heads=2, num_kv_heads=2,
+    d_ff=128, vocab_size=VOCAB, num_classes=2, dtype="float32")
+params = build_model(cfg).init(jax.random.PRNGKey(0))
+eval_data = make_dataset("imdb_like", 128, seed=2, seq_len=16)
+rt = EdgeCloudRuntime(cfg)
+cost = CostModel(num_layers=cfg.num_layers, alpha=0.6, offload=3.0)
+for depth in (1, 2):
+    out = serve_stream_distributed(
+        rt, params, OnlineStream(eval_data, seed=0), cost,
+        batch_size=16, max_samples=97, overlap=True, overlap_depth=depth)
+    print("RESULT " + json.dumps({
+        "depth": depth, "host": out["distributed"]["host_id"],
+        "num_hosts": out["distributed"]["num_hosts"],
+        "arms": out["arms"].tolist(), "preds": out["preds"].tolist(),
+        "rewards": out["rewards"].tolist(),
+        "exited": out["exited"].tolist(),
+        "q": out["state"]["q"].tolist(), "n": out["state"]["n"].tolist(),
+        "t": out["state"]["t"], "cost_total": out["cost_total"],
+        "offload_bytes": out["offload_bytes"]}))
+"""
+
+
+def test_two_process_distributed_matches_sharded():
+    """The acceptance differential: a real 2-process run (forced host
+    devices, coordinator exchange) produces bit-identical controller
+    state and exit decisions to the single-process sharded reference on
+    the same stream — on BOTH hosts' mirrors, at K in {1, 2}."""
+    env = {"PYTHONPATH": os.path.join(_REPO, "src") + os.pathsep +
+           os.environ.get("PYTHONPATH", "")}
+    procs = run_distributed_subprocesses(
+        _DIST_WORKER, 2, devices_per_process=1, env=env, cwd=_REPO)
+    results = []
+    for i, p in enumerate(procs):
+        assert p.returncode == 0, f"worker {i}:\n{p.stderr[-4000:]}"
+        for line in p.stdout.splitlines():
+            if line.startswith("RESULT "):
+                results.append(json.loads(line[len("RESULT "):]))
+    assert len(results) == 4                     # 2 hosts x 2 depths
+
+    cfg, params = _testbed()
+    eval_data = make_dataset("imdb_like", 128, seed=2, seq_len=16)
+    rt = EdgeCloudRuntime(cfg)
+    cost = CostModel(num_layers=cfg.num_layers, alpha=0.6, offload=3.0)
+    for depth in (1, 2):
+        ref = serve_stream_sharded(
+            rt, params, OnlineStream(eval_data, seed=0), cost,
+            batch_size=16, max_samples=97, replicas=1,
+            overlap=True, overlap_depth=depth)
+        mine = [r for r in results if r["depth"] == depth]
+        assert sorted(r["host"] for r in mine) == [0, 1]
+        for r in mine:
+            assert r["num_hosts"] == 2
+            np.testing.assert_array_equal(r["arms"], ref["arms"])
+            np.testing.assert_array_equal(r["preds"], ref["preds"])
+            np.testing.assert_array_equal(r["rewards"], ref["rewards"])
+            np.testing.assert_array_equal(r["exited"], ref["exited"])
+            np.testing.assert_array_equal(r["q"], ref["state"]["q"])
+            np.testing.assert_array_equal(r["n"], ref["state"]["n"])
+            assert r["t"] == ref["state"]["t"]
+            assert r["cost_total"] == ref["cost_total"]
+            assert r["offload_bytes"] == ref["offload_bytes"]

@@ -67,7 +67,7 @@ def test_sharded_r1_sync_bit_identical(served, side_info, batch_size):
     assert got["offload_bytes"] == ref["offload_bytes"]
     assert got["offload_frac"] == ref["offload_frac"]
     assert got.get("accuracy") == ref.get("accuracy")
-    assert got["overlap"] == {"enabled": False,
+    assert got["overlap"] == {"enabled": False, "depth": 1,
                               "batches": got["overlap"]["batches"],
                               "batches_overlapped": 0}
 
@@ -75,10 +75,10 @@ def test_sharded_r1_sync_bit_identical(served, side_info, batch_size):
 # --------------------------------------------- overlap-mode NumPy replay
 
 def _numpy_overlap_replay(cost: CostModel, beta, batch_size, conf_paths,
-                          conf_Ls, ob_per_sample, *, side_info):
-    """Independent replay of the double-buffered schedule: arms for batch
-    t are drawn from a state that has folded updates only through batch
-    t-1's *predecessor* (batch t-1 folds after t's selection)."""
+                          conf_Ls, ob_per_sample, *, side_info, depth=1):
+    """Independent replay of the depth-K pipelined schedule: up to
+    ``depth`` batches stay pending, and batch t folds only after batch
+    t+K's selection (K=1 is the classic double-buffered schedule)."""
     L = cost.num_layers
     q = np.zeros(L, np.float64)
     n = np.zeros(L, np.float64)
@@ -115,7 +115,7 @@ def _numpy_overlap_replay(cost: CostModel, beta, batch_size, conf_paths,
         t += len(batch)
 
     N = len(conf_paths)
-    pending = None
+    pending = []
     i = 0
     while i < N:
         bsz = min(batch_size, N - i)
@@ -131,34 +131,35 @@ def _numpy_overlap_replay(cost: CostModel, beta, batch_size, conf_paths,
         batch = [(batch_arms[k],
                   np.asarray(conf_paths[i + k], np.float64).reshape(-1),
                   conf_Ls[i + k]) for k in range(bsz)]
-        if pending is not None:
-            fold(pending)          # batch t-1 folds after t's selection
-        pending = batch
+        pending.append(batch)
+        while len(pending) > depth:
+            fold(pending.pop(0))   # batch t-K folds after t's selection
         i += bsz
-    if pending is not None:
-        fold(pending)
+    while pending:
+        fold(pending.pop(0))
     return {"arms": np.asarray(arms), "rewards": np.asarray(rewards),
             "cost_total": float(np.sum(costs)),
             "offload_bytes": int(np.sum(obs))}
 
 
-@pytest.mark.parametrize("side_info,batch_size",
-                         [(False, 8), (False, 32), (True, 8)])
+@pytest.mark.parametrize("side_info,batch_size,depth",
+                         [(False, 8, 1), (False, 32, 1), (True, 8, 1),
+                          (False, 8, 2), (False, 8, 4), (True, 8, 3)])
 def test_sharded_overlap_matches_numpy_replay(served, side_info,
-                                              batch_size):
+                                              batch_size, depth):
     cfg, params, _, eval_data = served
     rt = EdgeCloudRuntime(cfg)
     cost = CostModel(num_layers=cfg.num_layers, alpha=0.75, offload=3.0)
     out = serve_stream_sharded(rt, params, OnlineStream(eval_data, seed=0),
                                cost, side_info=side_info,
                                batch_size=batch_size, replicas=1,
-                               overlap=True, max_samples=200,
-                               record_trace=True)
+                               overlap=True, overlap_depth=depth,
+                               max_samples=200, record_trace=True)
     seq_len = eval_data["tokens"].shape[1]
     ref = _numpy_overlap_replay(
         cost, 1.0, batch_size, out["trace"]["conf_path"],
         out["trace"]["conf_L"], rt.offload_bytes(1, seq_len),
-        side_info=side_info)
+        side_info=side_info, depth=depth)
     np.testing.assert_array_equal(out["arms"], ref["arms"])
     np.testing.assert_allclose(out["rewards"], ref["rewards"],
                                rtol=1e-5, atol=1e-6)

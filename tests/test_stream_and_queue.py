@@ -7,6 +7,7 @@ bookkeeping, clear-at-dispatch — is independent of what `cloud_fn`
 computes.
 """
 import numpy as np
+import pytest
 
 from repro.data import microbatches
 from repro.serving import OffloadQueue, PendingFlush
@@ -165,3 +166,83 @@ def test_empty_flush():
     assert isinstance(pending, PendingFlush)
     assert len(pending) == 0
     assert pending.resolve() == {}
+
+
+# ------------------------------------------------ depth-K pipeline ring
+
+@pytest.mark.parametrize("K", [1, 2, 4])
+def test_flush_ring_bounds_inflight(K):
+    """flush_async(depth=K) keeps at most K unresolved flushes: the
+    oldest is force-resolved, FIFO, once a (K+1)th is dispatched."""
+    _, q = _queue()
+    pendings = []
+    for i in range(K + 3):
+        q.add_rows(0, _rows(1), [i])
+        pendings.append(q.flush_async(depth=K))
+        # everything older than the last K slots has been force-resolved
+        for j, p in enumerate(pendings):
+            assert p.resolved == (j < len(pendings) - K), (i, j)
+        assert sum(not p.resolved for p in pendings) <= K
+
+
+@pytest.mark.parametrize("K", [1, 2, 4])
+def test_flush_ring_results_complete_after_drain(K):
+    """Force-resolved and caller-resolved flushes agree: every slot's
+    result lands exactly once regardless of where resolution happened."""
+    rt, q = _queue()
+    pendings = []
+    for i in range(2 * K + 1):
+        q.add_rows(i % 3, _rows(1), [i])
+        pendings.append(q.flush_async(depth=K))
+    merged = {}
+    for p in pendings:                    # final drain: resolve the rest
+        merged.update(p.resolve())
+    assert sorted(merged) == list(range(2 * K + 1))
+    assert len(rt.calls) == 2 * K + 1
+
+
+def test_flush_ring_k1_is_double_buffering():
+    """depth=1 reproduces the double-buffered schedule bit-for-bit: at
+    any instant exactly one flush is in flight, and dispatching flush
+    t+1 resolves flush t."""
+    rt, q = _queue()
+    q.add_rows(0, _rows(1), [0])
+    p0 = q.flush_async(depth=1)
+    assert not p0.resolved
+    q.add_rows(1, _rows(1), [1])
+    p1 = q.flush_async(depth=1)
+    assert p0.resolved and not p1.resolved
+    # identical dispatches and results as explicit double buffering
+    rt2, q2 = _queue()
+    q2.add_rows(0, _rows(1), [0])
+    r0 = q2.flush_async()
+    q2.add_rows(1, _rows(1), [1])
+    r1 = q2.flush_async()
+    assert p0.resolve() == r0.resolve()
+    assert p1.resolve() == r1.resolve()
+    assert rt.calls == rt2.calls
+
+
+def test_flush_ring_empty_flushes_occupy_slots():
+    """Batches with nothing queued still dispatch (empty) flushes; the
+    ring handles them uniformly."""
+    _, q = _queue()
+    p0 = q.flush_async(depth=1)            # nothing queued
+    assert len(p0) == 0
+    q.add_rows(0, _rows(1), [1])
+    p1 = q.flush_async(depth=1)
+    assert p0.resolved                     # evicted by p1
+    assert p0.resolve() == {}
+    assert p1.resolve() == {1: (0.0, 0)}
+
+
+def test_flush_ring_invalid_depth_preserves_queue():
+    """A rejected depth must fail before dispatch: no launches fired, no
+    queued rows lost."""
+    rt, q = _queue()
+    q.add_rows(0, _rows(1), [0])
+    with pytest.raises(ValueError):
+        q.flush_async(depth=0)
+    assert rt.calls == []                 # nothing dispatched
+    assert len(q) == 1                    # rows survive the rejected call
+    assert q.flush() == {0: (0.0, 0)}

@@ -1,0 +1,54 @@
+"""Check that relative markdown links in the repo's docs resolve.
+
+Scans README.md, ROADMAP.md, docs/*.md and benchmarks/README.md for
+inline links/images `[...](target)` and verifies every relative target
+exists (anchors and external URLs are skipped; anchors-only links too).
+Exits non-zero listing every dangling link — run by the CI lint job so
+doc cross-references can't rot.
+
+    python tools/check_links.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+
+def doc_files(root: pathlib.Path):
+    for pattern in ("README.md", "ROADMAP.md", "docs/*.md",
+                    "benchmarks/README.md"):
+        yield from sorted(root.glob(pattern))
+
+
+def check(root: pathlib.Path):
+    errors = []
+    for md in doc_files(root):
+        for lineno, line in enumerate(md.read_text().splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                if target.startswith("#"):        # intra-page anchor
+                    continue
+                path = (md.parent / target.split("#", 1)[0]).resolve()
+                if not path.exists():
+                    errors.append(
+                        f"{md.relative_to(root)}:{lineno}: dangling link "
+                        f"-> {target}")
+    return errors
+
+
+def main():
+    root = pathlib.Path(__file__).resolve().parent.parent
+    errors = check(root)
+    if errors:
+        print("\n".join(errors))
+        sys.exit(1)
+    n = len(list(doc_files(root)))
+    print(f"doc links OK ({n} files checked)")
+
+
+if __name__ == "__main__":
+    main()
