@@ -17,18 +17,21 @@ Multi-process serving spawns itself (serving/distributed.py):
 import argparse
 import dataclasses
 import os
+import tempfile
 
-from repro.serving.distributed import (ENV_COORDINATOR,
+from repro.serving.distributed import (ENV_COORDINATOR, ENV_KV_DIR,
+                                       cluster_identity,
                                        drive_respawned_cluster,
                                        init_distributed_from_env)
 
 # worker mode iff spawned by respawn_distributed; jax.distributed must
-# initialize before anything touches a jax backend
-_IN_CLUSTER = os.environ.get(ENV_COORDINATOR) is not None
+# initialize before anything touches a jax backend (FileKV clusters —
+# --fault-tolerant — skip that init and exchange through ENV_KV_DIR)
+_IN_CLUSTER = (os.environ.get(ENV_COORDINATOR) is not None
+               or os.environ.get(ENV_KV_DIR) is not None)
 if _IN_CLUSTER:
     init_distributed_from_env()
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -64,13 +67,29 @@ def main():
                          "--num-processes workers when run standalone")
     ap.add_argument("--num-processes", type=int, default=2,
                     help="worker count for --distributed self-spawn")
+    ap.add_argument("--fault-tolerant", action="store_true",
+                    help="with --distributed: serve through the "
+                         "resilient exchange over a FileKV dir — the "
+                         "cluster survives worker death (full "
+                         "supervisor/respawn flow lives in "
+                         "repro.launch.serve)")
+    ap.add_argument("--heartbeat-timeout", type=float, default=5.0,
+                    help="failure-detection bound for --fault-tolerant")
     args = ap.parse_args()
 
     if args.distributed and not _IN_CLUSTER:
-        drive_respawned_cluster(args.num_processes,
-                                devices_per_process=max(args.replicas, 1))
+        if args.fault_tolerant:
+            drive_respawned_cluster(
+                args.num_processes,
+                devices_per_process=max(args.replicas, 1),
+                env={ENV_KV_DIR: tempfile.mkdtemp(prefix="splitee-kv-")},
+                coordinator=False, fail_fast=False)
+        else:
+            drive_respawned_cluster(
+                args.num_processes,
+                devices_per_process=max(args.replicas, 1))
         return
-    host0 = (not _IN_CLUSTER) or jax.process_index() == 0
+    host0 = (not _IN_CLUSTER) or cluster_identity()[0] == 0
 
     cfg, params, model, _, eval_data, (conf_val, correct_val), log = \
         build_testbed(layers=args.layers, steps=args.steps,
@@ -95,7 +114,9 @@ def main():
                 batch_size=max(args.batch_size, args.replicas, 1),
                 replicas=max(args.replicas, 1),
                 overlap_depth=args.overlap_depth,
-                max_samples=args.samples)
+                max_samples=args.samples,
+                fault_tolerant=os.environ.get(ENV_KV_DIR) is not None,
+                heartbeat_timeout=args.heartbeat_timeout)
         elif args.replicas > 0:
             out = serve_stream_sharded(
                 runtime, params, stream, cost, side_info=side_info,

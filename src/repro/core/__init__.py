@@ -24,4 +24,6 @@ from repro.core.thresholds import calibrate_alpha  # noqa: F401
 from repro.core.controller import (  # noqa: F401
     ShardUpdate,
     SplitEEController,
+    state_from_bytes,
+    state_to_bytes,
 )

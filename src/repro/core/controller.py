@@ -53,12 +53,37 @@ shard, so every serving path shares one update code path.
 from __future__ import annotations
 
 import dataclasses
+import io
 from typing import Dict, Optional, Sequence
 
 import numpy as np
 
 from repro.core.policy import BanditState, init_state
 from repro.core.rewards import CostModel
+
+
+def state_to_bytes(state) -> bytes:
+    """Serialize a bandit state (BanditState or snapshot dict) exactly.
+
+    npz preserves array dtypes bit-for-bit, which the fault-tolerance
+    invariant depends on: a host seeded from a shipped snapshot must
+    evolve bit-identically to the host that produced it.
+    """
+    if isinstance(state, dict):
+        q, n, t = state["q"], state["n"], state["t"]
+    else:
+        q, n, t = state.q, state.n, state.t
+    buf = io.BytesIO()
+    np.savez(buf, q=np.asarray(q), n=np.asarray(n),
+             t=np.asarray(int(t), np.int64))
+    return buf.getvalue()
+
+
+def state_from_bytes(raw: bytes) -> Dict[str, np.ndarray]:
+    """Inverse of `state_to_bytes`; returns a snapshot dict for
+    `SplitEEController.restore`."""
+    z = np.load(io.BytesIO(raw))
+    return {"q": z["q"], "n": z["n"], "t": int(z["t"])}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +114,25 @@ class SplitEEController:
             "arm": [], "exited": [], "reward": [], "cost": [],
             "offload_bytes": [],
         }
+
+    def snapshot(self) -> Dict[str, np.ndarray]:
+        """Copy of the policy-complete bandit state (q, n, t).
+
+        Everything arm selection reads — restoring a fresh controller
+        from a snapshot reproduces the donor's subsequent evolution
+        bit-for-bit (history is bookkeeping, not policy state, and is
+        deliberately NOT part of the snapshot: a rejoined host's history
+        covers only post-rejoin samples).
+        """
+        return {"q": np.asarray(self.state.q).copy(),
+                "n": np.asarray(self.state.n).copy(),
+                "t": int(self.state.t)}
+
+    def restore(self, snap: Dict[str, np.ndarray]):
+        """Install a snapshot, preserving array dtypes exactly."""
+        self.state = BanditState(np.asarray(snap["q"]).copy(),
+                                 np.asarray(snap["n"]).copy(),
+                                 int(snap["t"]))
 
     # numpy mirror of policy.bandit_step for host-side streaming
     def choose_split(self) -> int:

@@ -9,12 +9,22 @@ re-executes this driver as 2 jax.distributed workers (forced host
 devices on CPU), each building the same deterministic testbed and
 serving its contiguous slice of every micro-batch
 (serving/distributed.py); host 0's summary is echoed.
+
+``--fault-tolerant`` switches the cluster to the resilient runtime:
+workers exchange over a shared FileKV directory (no jax.distributed
+coordinator, so no single process owns the transport), publish
+heartbeats, and survive worker death — the supervisor respawns a dead
+worker once and it rejoins at an epoch boundary from the KV-store
+state. ``--heartbeat-timeout`` bounds failure detection (see
+docs/SERVING.md, "Failure model").
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import itertools
 import os
+import tempfile
 
 from repro.configs import get_smoke_config
 from repro.core import (CostModel, calibrate_alpha, confidence_cascade,
@@ -25,8 +35,10 @@ from repro.launch.train import exit_accuracy, train_classifier
 from repro.serving import (EdgeCloudRuntime, serve_stream,
                            serve_stream_batched, serve_stream_distributed,
                            serve_stream_sharded)
-from repro.serving.distributed import (ENV_COORDINATOR,
+from repro.serving.distributed import (ENV_COORDINATOR, ENV_KV_DIR,
+                                       cluster_identity,
                                        drive_respawned_cluster,
+                                       ft_serving_context,
                                        init_distributed_from_env)
 
 
@@ -85,20 +97,52 @@ def main():
                          "cluster (CPU hosts get forced host devices)")
     ap.add_argument("--num-processes", type=int, default=2,
                     help="worker count for --distributed self-spawn")
+    ap.add_argument("--fault-tolerant", action="store_true",
+                    help="with --distributed: serve through the "
+                         "resilient exchange (heartbeats + membership "
+                         "verdicts over a shared FileKV dir); the "
+                         "supervisor respawns a dead worker once and it "
+                         "rejoins from the KV-store state")
+    ap.add_argument("--heartbeat-timeout", type=float, default=5.0,
+                    help="seconds a host's heartbeat may be stale before "
+                         "it is declared dead (fault-tolerant mode); see "
+                         "docs/SERVING.md for how to size it")
     args = ap.parse_args()
 
     # worker mode iff the SPLITEE_* cluster env vars are present (set by
     # respawn_distributed); must run before any other jax use
-    in_cluster = os.environ.get(ENV_COORDINATOR) is not None
+    in_cluster = (os.environ.get(ENV_COORDINATOR) is not None
+                  or os.environ.get(ENV_KV_DIR) is not None)
     if in_cluster:
         init_distributed_from_env()
     elif args.distributed:
-        drive_respawned_cluster(args.num_processes,
-                                devices_per_process=args.replicas)
+        if args.fault_tolerant:
+            # coordinator-free cluster over a FileKV dir: any worker
+            # (host 0 included) can die without taking the transport
+            # along, and the supervisor can respawn it to rejoin
+            drive_respawned_cluster(
+                args.num_processes, devices_per_process=args.replicas,
+                env={ENV_KV_DIR: tempfile.mkdtemp(prefix="splitee-kv-")},
+                coordinator=False, fail_fast=False, respawn=True,
+                watchdog_timeout=max(4 * args.heartbeat_timeout, 20.0),
+                startup_grace=600.0)
+        else:
+            drive_respawned_cluster(args.num_processes,
+                                    devices_per_process=args.replicas)
         return
 
-    import jax
-    host0 = (not in_cluster) or jax.process_index() == 0
+    # fault-tolerant workers build their exchange (and, when respawned,
+    # download the merged state + stream position) BEFORE the expensive
+    # testbed build, so heartbeats cover the startup skew
+    fault_tolerant = in_cluster and os.environ.get(ENV_KV_DIR) is not None
+    exchange, init_state, skip = None, None, 0
+    if fault_tolerant:
+        exchange, init_state, skip = ft_serving_context(
+            heartbeat_timeout=args.heartbeat_timeout,
+            pipeline_depth=0 if args.no_overlap else args.overlap_depth)
+
+    import jax  # noqa: F401  (backend init after cluster bootstrap)
+    host0 = (not in_cluster) or cluster_identity()[0] == 0
 
     cfg, params, model, _, eval_data, (conf_val, correct_val), log = \
         build_testbed(layers=args.layers, steps=args.steps,
@@ -115,6 +159,16 @@ def main():
     runtime = EdgeCloudRuntime(cfg)
     stream = OnlineStream(eval_data, seed=0)
     if args.distributed or in_cluster:
+        samples = args.samples - skip
+        if samples <= 0:
+            # rejoin ack landed at (or past) the stream's final fold:
+            # nothing left to serve, and max_samples=0 would mean
+            # "unlimited" to the serving loop
+            print(f"[fault-tolerant] rejoined at stream position {skip} "
+                  f"of {args.samples}: nothing left to serve")
+            return
+        if skip:                      # rejoined worker: resume mid-stream
+            stream = itertools.islice(iter(stream), skip, None)
         out = serve_stream_distributed(runtime, params, stream, cost,
                                        side_info=args.side_info,
                                        batch_size=max(args.batch_size,
@@ -122,7 +176,11 @@ def main():
                                        replicas=args.replicas,
                                        overlap=not args.no_overlap,
                                        overlap_depth=args.overlap_depth,
-                                       max_samples=args.samples)
+                                       max_samples=samples,
+                                       exchange=exchange,
+                                       init_state=init_state,
+                                       stream_offset=skip,
+                                       heartbeat_timeout=args.heartbeat_timeout)
     elif args.mesh or args.replicas > 1:
         out = serve_stream_sharded(runtime, params, stream, cost,
                                    side_info=args.side_info,
@@ -147,9 +205,19 @@ def main():
     if args.distributed or in_cluster:
         ov = out["overlap"]
         dist = out["distributed"]
+        ft = " FT" if dist.get("fault_tolerant") else ""
         variant += (f" (distributed H={dist['num_hosts']} "
                     f"R={out['replicas']}/host B={out['batch_size']} "
-                    f"overlap={'K=%d' % ov['depth'] if ov['enabled'] else 'off'})")
+                    f"overlap={'K=%d' % ov['depth'] if ov['enabled'] else 'off'}"
+                    f"{ft})")
+        for rec in dist.get("reconfigurations", []):
+            print(f"[fault-tolerant] round {rec['round']}: "
+                  f"removed={rec['removed']} joined={rec['joined']} "
+                  f"members={rec['members_after']} "
+                  f"(detected in {rec['detect_s']:.1f}s)")
+        if dist.get("lost_samples"):
+            print(f"[fault-tolerant] {dist['lost_samples']} samples lost "
+                  f"with failed hosts' in-flight slices")
     elif args.mesh or args.replicas > 1:
         ov = out["overlap"]
         variant += (f" (sharded R={out['replicas']} "
@@ -161,6 +229,8 @@ def main():
           f"cost={out['cost_total']:.0f}λ offload_frac={out['offload_frac']:.2f} "
           f"offloaded={out['offload_bytes']/1e6:.1f}MB")
 
+    if skip:
+        return     # rejoined host 0: partial stream, baselines unmeaning
     # reference: final-exit on the same samples
     from repro.launch.train import exit_accuracy as ea
     conf_e, _, corr_e = ea(model, params, {

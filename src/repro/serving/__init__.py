@@ -10,10 +10,27 @@ from repro.serving.batched import (  # noqa: F401
 from repro.serving.sharded import (  # noqa: F401
     serve_stream_sharded,
 )
+from repro.serving.kvstore import (  # noqa: F401
+    CoordinatorKV,
+    FileKV,
+    KVTimeout,
+)
+from repro.serving.faults import (  # noqa: F401
+    FAULT_KILL_EXIT,
+    FaultInjector,
+    parse_fault_plan,
+)
 from repro.serving.distributed import (  # noqa: F401
+    ClusterReport,
     CoordinatorExchange,
+    FencedHostError,
     LoopbackExchange,
+    ResilientExchange,
+    ft_serving_context,
     init_distributed_from_env,
+    make_resilient_exchange,
     run_distributed_subprocesses,
+    run_supervised_cluster,
     serve_stream_distributed,
+    start_worker_heartbeat,
 )

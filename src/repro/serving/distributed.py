@@ -49,14 +49,37 @@ with `run_distributed_subprocesses` (each gets
 ``--xla_force_host_platform_device_count`` plus the SPLITEE_* cluster
 env vars) and call `init_distributed_from_env()` first thing in the
 worker, before any other jax use.
+
+Fault tolerance (``fault_tolerant=True``): the lockstep
+`CoordinatorExchange` is replaced by `ResilientExchange`, which runs the
+same per-round all-gather over a pluggable KV transport
+(serving/kvstore.py) with a liveness layer on top — every host's
+heartbeat thread stamps a per-host key, gathers bound their wait on
+missing payloads by watching those stamps, and the acting arbiter (the
+lowest-id live host) publishes a per-round membership *verdict* every
+host folds identically. A crashed worker is detected within the
+heartbeat timeout, its un-gathered slice of the in-flight batch is
+dropped (the only data loss), survivors re-slice subsequent
+micro-batches over the reduced host set, and — because the merged
+controller state is policy-complete — the run continues bit-identically
+to a smaller cluster seeded with the merged state at the failure epoch:
+failure changes who computes, never what the policy learns
+(tests/test_serving_faults.py pins this). A respawned worker rejoins at
+an epoch boundary by downloading the merged state + stream position
+from the KV store (`request_rejoin`). See docs/SERVING.md §Failure
+model.
 """
 from __future__ import annotations
 
+import base64
+import dataclasses
 import io
+import json
 import os
 import socket
 import subprocess
 import sys
+import tempfile
 import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
@@ -65,21 +88,65 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core.controller import ShardUpdate, SplitEEController
+from repro.core.controller import (ShardUpdate, SplitEEController,
+                                   state_from_bytes, state_to_bytes)
 from repro.core.rewards import CostModel
 from repro.launch.mesh import make_serving_mesh
 from repro.launch.shardings import param_shardings
 from repro.serving.batched import OffloadQueue, _edge_phase
+from repro.serving.faults import FaultInjector
+from repro.serving.kvstore import CoordinatorKV, FileKV, KVKeyExists, KVTimeout
 from repro.serving.sharded import (_BatchCtx, _data_put, _drive_pipeline,
                                    _resolve_cloud, _serve_result,
                                    _shard_sizes)
 from repro.serving.simulator import EdgeCloudRuntime
 
-# Cluster topology env vars understood by `init_distributed_from_env`
-# (set for every worker by `run_distributed_subprocesses`).
+# Cluster topology env vars understood by `init_distributed_from_env` /
+# `ft_serving_context` (set for every worker by
+# `run_distributed_subprocesses` / `run_supervised_cluster`).
 ENV_COORDINATOR = "SPLITEE_COORDINATOR"
 ENV_NUM_PROCESSES = "SPLITEE_NUM_PROCESSES"
 ENV_PROCESS_ID = "SPLITEE_PROCESS_ID"
+# coordinator-free clusters: root directory of the FileKV exchange
+ENV_KV_DIR = "SPLITEE_KV_DIR"
+# set by the supervisor on respawned workers: take the rejoin path
+ENV_REJOIN = "SPLITEE_REJOIN"
+# liveness file stamped by `start_worker_heartbeat` for the supervisor's
+# hung-worker watchdog
+ENV_WORKER_HEARTBEAT = "SPLITEE_WORKER_HEARTBEAT"
+
+
+_WORKER_HB_STARTED = [False]
+
+
+def start_worker_heartbeat(interval: float = 0.5) -> bool:
+    """Stamp the supervisor's liveness file from a daemon thread.
+
+    When `ENV_WORKER_HEARTBEAT` is set (by `run_supervised_cluster` with
+    a watchdog), the file's mtime is the supervisor's only way to tell a
+    *hung* worker (SIGSTOP, deadlock — process alive, stamps frozen)
+    from a slow one; a worker that never starts stamping is covered by
+    the supervisor's startup grace. Idempotent; returns True when the
+    thread was started.
+    """
+    path = os.environ.get(ENV_WORKER_HEARTBEAT)
+    if not path or _WORKER_HB_STARTED[0]:
+        return False
+    _WORKER_HB_STARTED[0] = True
+
+    def loop():
+        i = 0
+        while True:
+            i += 1
+            try:
+                with open(path, "w") as f:
+                    f.write(str(i))
+            except OSError:
+                pass
+            time.sleep(interval)
+
+    threading.Thread(target=loop, daemon=True).start()
+    return True
 
 
 def init_distributed_from_env() -> bool:
@@ -87,8 +154,10 @@ def init_distributed_from_env() -> bool:
 
     Call before any other jax API in a worker process (device topology is
     fixed at backend init). Returns True when a multi-process cluster was
-    joined, False when the env vars are absent (plain single-process run).
+    joined, False when the env vars are absent (plain single-process run,
+    or a coordinator-free FileKV cluster — see `ft_serving_context`).
     """
+    start_worker_heartbeat()
     coord = os.environ.get(ENV_COORDINATOR)
     if not coord:
         return False
@@ -97,6 +166,19 @@ def init_distributed_from_env() -> bool:
     jax.distributed.initialize(coordinator_address=coord,
                                num_processes=num, process_id=pid)
     return num > 1
+
+
+def cluster_identity() -> Tuple[int, int]:
+    """(host_id, num_hosts) for this process.
+
+    Spawned workers carry their identity in the SPLITEE_* env vars
+    whether or not jax.distributed is up (FileKV clusters never
+    initialize it); otherwise fall back to the jax process topology.
+    """
+    pid = os.environ.get(ENV_PROCESS_ID)
+    if pid is not None and os.environ.get(ENV_COORDINATOR) is None:
+        return int(pid), int(os.environ.get(ENV_NUM_PROCESSES, "1"))
+    return jax.process_index(), jax.process_count()
 
 
 class LoopbackExchange:
@@ -134,6 +216,11 @@ class CoordinatorExchange:
     Each instance claims a fresh epoch namespace (all hosts construct
     their exchanges in the same deterministic order, so epochs agree) —
     back-to-back serving passes on one cluster never collide on keys.
+
+    Transport goes through `CoordinatorKV` (string-API, base64): the
+    client's bytes API segfaults in this jax pin whenever the value is
+    already present at call time, which for a lockstep gather means a
+    crash whenever a peer wins the write/read race.
     """
 
     def __init__(self, *, prefix: str = "splitee/xhost",
@@ -145,6 +232,7 @@ class CoordinatorExchange:
                 "init_distributed_from_env() (or jax.distributed."
                 "initialize) before serving distributed")
         self._client = global_state.client
+        self._kv = CoordinatorKV(global_state.client)
         self._prefix = f"{prefix}/{_EXCHANGE_EPOCH[0]}"
         _EXCHANGE_EPOCH[0] += 1
         self._timeout_ms = timeout_ms
@@ -155,15 +243,13 @@ class CoordinatorExchange:
     def allgather_bytes(self, payload: bytes) -> List[bytes]:
         r = self._round
         self._round += 1
-        self._client.key_value_set_bytes(
-            f"{self._prefix}/{r}/{self.host_id}", payload)
+        self._kv.set(f"{self._prefix}/{r}/{self.host_id}", payload)
         out = [payload if h == self.host_id else
-               self._client.blocking_key_value_get_bytes(
-                   f"{self._prefix}/{r}/{h}", self._timeout_ms)
+               self._kv.get(f"{self._prefix}/{r}/{h}",
+                            self._timeout_ms / 1000.0)
                for h in range(self.num_hosts)]
         if r > 0:
-            self._client.key_value_delete(
-                f"{self._prefix}/{r - 1}/{self.host_id}")
+            self._kv.delete(f"{self._prefix}/{r - 1}/{self.host_id}")
         return out
 
     def close(self):
@@ -173,8 +259,513 @@ class CoordinatorExchange:
             return
         self._client.wait_at_barrier(f"{self._prefix}/close",
                                      self._timeout_ms)
-        self._client.key_value_delete(
-            f"{self._prefix}/{self._round - 1}/{self.host_id}")
+        self._kv.delete(f"{self._prefix}/{self._round - 1}/{self.host_id}")
+
+
+class FencedHostError(RuntimeError):
+    """This host was removed from the membership by a round verdict (its
+    update never reached the store in time) and must stop serving; a
+    supervisor may respawn it to rejoin at a later epoch boundary."""
+
+
+@dataclasses.dataclass
+class GatherResult:
+    """One fault-tolerant gather round's outcome."""
+    round: int
+    payloads: List[bytes]      # in ``fold`` order
+    fold: List[int]            # hosts whose round payloads fold (sorted)
+    removed: List[int]         # hosts declared dead this round
+    joined: List[int]          # hosts admitted this round (active later)
+    members: List[int]         # active membership for the NEXT round
+
+
+@dataclasses.dataclass
+class RejoinAck:
+    """What a rejoining host downloads from the KV store: the merged
+    controller state (policy-complete), the stream position, and its
+    first gather round."""
+    state: Dict[str, np.ndarray]
+    selected: int
+    first_round: int
+    members: List[int]
+
+
+class _HeartbeatMonitor:
+    """Tracks per-host heartbeat stamps; a host is stale once its stamp
+    has not advanced for the exchange's heartbeat timeout (the baseline
+    is the first observation, so detection takes at most one timeout)."""
+
+    def __init__(self, exchange: "ResilientExchange"):
+        self._ex = exchange
+        self._seen: Dict[int, Tuple[Optional[bytes], float]] = {}
+
+    def stale(self, h: int) -> bool:
+        stamp = self._ex.kv.try_get(self._ex._hbkey(h))
+        now = time.monotonic()
+        prev = self._seen.get(h)
+        if prev is None or prev[0] != stamp:
+            self._seen[h] = (stamp, now)
+            return False
+        return now - prev[1] > self._ex.heartbeat_timeout
+
+
+_FT_EPOCH = [0]   # distinct KV namespace per ResilientExchange instance
+
+
+class ResilientExchange:
+    """Fault-tolerant cross-host all-gather over a pluggable KV store.
+
+    Same round structure as `CoordinatorExchange` — every active host
+    writes its round-r payload, reads everyone else's, rounds strictly
+    ordered — plus a liveness layer that keeps the cluster moving when a
+    host dies:
+
+    * **heartbeats** — each host's daemon thread stamps a per-host key
+      every ``heartbeat_interval`` seconds, *independently of compute
+      progress*, so a slow host (stamps advancing) is distinguishable
+      from a dead one (stamps frozen).
+    * **bounded gather + verdict** — the acting arbiter (lowest-id live
+      host) collects round-r payloads, waiting on a missing host only
+      while its heartbeat advances; once the heartbeat has been stale
+      for ``heartbeat_timeout`` the host is declared dead. The arbiter
+      publishes a round *verdict* (fold set + membership map) that every
+      host applies identically, so all mirrors agree on exactly which
+      shard summaries fold — the survivors' controller evolution stays
+      bit-identical across the cluster. Verdict writes are
+      first-writer-wins, giving arbiter failover: if the arbiter itself
+      dies, the next-ranked live host observes its stale heartbeat,
+      decides, and publishes.
+    * **rebuild** — hosts removed by a verdict stop being waited on and
+      stop receiving batch slices; survivors re-slice subsequent
+      micro-batches over the reduced membership. A host whose payload
+      was lost but which is still alive (drop-KV-write / partition)
+      reads a verdict excluding it and raises `FencedHostError`.
+    * **rejoin** — a respawned host writes a rejoin request; the arbiter
+      admits it with ``active_from = r + pipeline_depth + 1`` (so
+      in-flight overlapped batches are unaffected) and, after folding
+      round ``active_from - 1``, acks with the merged controller state
+      and stream position (`post_fold`). The joiner restores, skips the
+      consumed samples, and serves from its first active round — from
+      which point its mirror is bit-identical to the survivors'.
+
+    ``injector`` (serving/faults.py) is the deterministic fault hook
+    used by tests and benchmarks.
+    """
+
+    fault_tolerant = True
+
+    def __init__(self, kv, *, host_id: int, num_hosts: int,
+                 heartbeat_timeout: float = 5.0,
+                 heartbeat_interval: float = 0.25,
+                 poll_interval: float = 0.05,
+                 verdict_timeout: float = 600.0,
+                 pipeline_depth: int = 0,
+                 prefix: str = "splitee/ft",
+                 rejoin: bool = False, injector=None,
+                 epoch: Optional[int] = None):
+        self.kv = kv
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self.heartbeat_timeout = heartbeat_timeout
+        self.heartbeat_interval = heartbeat_interval
+        self.poll_interval = poll_interval
+        self.verdict_timeout = verdict_timeout
+        self.pipeline_depth = pipeline_depth
+        self._base = prefix
+        self._injector = injector
+        self.reconfigurations: List[Dict[str, Any]] = []
+        self._pending_acks: Dict[int, int] = {}   # joiner -> ack-due round
+        self._fenced = False
+        self._round = 0
+        self._hb_stop = threading.Event()
+        self._hb_pause = threading.Event()
+        self._hb_thread: Optional[threading.Thread] = None
+        if rejoin:
+            # namespace + membership adopted from the rejoin ack
+            self._ns: Optional[str] = None
+            self._active: Dict[int, int] = {}
+        else:
+            if epoch is None:
+                # per-process counter: all hosts construct exchanges in
+                # the same deterministic order, so epochs agree across
+                # processes (in-process multi-host tests pass `epoch`)
+                epoch = _FT_EPOCH[0]
+                _FT_EPOCH[0] += 1
+            self._ns = f"{prefix}/{epoch}"
+            self._active = {h: 0 for h in range(num_hosts)}
+        # liveness is host-scoped, not namespace-scoped: stamping starts
+        # immediately even on the rejoin path, so a rejoiner is visible
+        # to the arbiter from the moment it asks to join
+        self._start_heartbeat()
+
+    # ------------------------------------------------------------- keys
+    def _pkey(self, r: int, h: int) -> str:
+        return f"{self._ns}/round/{r}/{h}"
+
+    def _vkey(self, r: int) -> str:
+        return f"{self._ns}/verdict/{r}"
+
+    def _hbkey(self, h: int) -> str:
+        # namespace-scoped: heartbeats assert "serving this pass", not
+        # "process exists" — a dead worker's respawned incarnation must
+        # NOT mask the death while it waits for admission
+        return f"{self._ns}/hb/{h}"
+
+    def _rejoin_key(self, h: int) -> str:
+        return f"{self._base}/rejoin/{h}"
+
+    def _rejoin_flag(self) -> str:
+        # one probe per round tells the arbiter whether any rejoin
+        # requests exist at all (per-host probes cost a bounded wait on
+        # the coordinator transport, so they are gated on this flag)
+        return f"{self._base}/rejoin_flag"
+
+    def _fenced_key(self, h: int) -> str:
+        # durable removal marker: verdicts are GC'd one round behind,
+        # but a falsely-removed host may wake arbitrarily late — it
+        # must still be able to learn its fate
+        return f"{self._ns}/fenced/{h}"
+
+    def _ack_key(self, h: int) -> str:
+        return f"{self._base}/ack/{h}"
+
+    # ------------------------------------------------------- heartbeats
+    def _start_heartbeat(self):
+        def loop():
+            i = 0
+            while True:
+                # rejoiners stamp nothing until the ack hands them the
+                # namespace — an unadmitted host has no liveness to claim
+                if self._ns is not None and not self._hb_pause.is_set():
+                    i += 1
+                    try:
+                        self.kv.set(self._hbkey(self.host_id),
+                                    str(i).encode(), overwrite=True)
+                    except Exception:
+                        pass
+                if self._hb_stop.wait(self.heartbeat_interval):
+                    return
+        self._hb_thread = threading.Thread(target=loop, daemon=True)
+        self._hb_thread.start()
+
+    def pause_heartbeat(self):
+        """Fault-injection hook: simulate a wedged process."""
+        self._hb_pause.set()
+
+    def resume_heartbeat(self):
+        self._hb_pause.clear()
+
+    # ------------------------------------------------------- membership
+    def members_for(self, rnd: int) -> List[int]:
+        """Hosts that own a slice of (and gather for) round ``rnd``."""
+        return sorted(h for h, a in self._active.items() if a <= rnd)
+
+    @property
+    def members(self) -> List[int]:
+        return self.members_for(self._round)
+
+    @property
+    def next_round(self) -> int:
+        return self._round
+
+    # ----------------------------------------------------------- gather
+    def gather(self, payload: bytes) -> GatherResult:
+        """One fault-tolerant all-gather round for this host."""
+        if self._fenced:
+            raise FencedHostError(f"host {self.host_id} is fenced")
+        r = self._round
+        if self._injector is not None:
+            self._injector.before_round(self, r)
+        drop = (self._injector is not None
+                and self._injector.drop_write(r))
+        if drop:
+            # a dropped write models a store partition: heartbeats stop
+            # reaching the store too, so the arbiter can detect it
+            self.pause_heartbeat()
+        else:
+            self.kv.set(self._pkey(r, self.host_id), payload)
+        verdict = self._obtain_verdict(r, my_write_ok=not drop)
+        self._apply_verdict(r, verdict)
+        if self.host_id not in self._active:
+            self._fenced = True
+            raise FencedHostError(
+                f"host {self.host_id} fenced at round {r}: its update "
+                f"never reached the store within the heartbeat timeout; "
+                f"survivors continue without it")
+        payloads = []
+        for h in verdict["fold"]:
+            if h == self.host_id:
+                payloads.append(payload)
+            else:
+                payloads.append(self.kv.get(self._pkey(r, h),
+                                            self.verdict_timeout))
+        if r > 0:
+            # GC one round behind: the round-r verdict proves every
+            # fold host finished reading round r-1 (payloads AND
+            # verdict; removed hosts learn their fate from the durable
+            # fenced marker instead)
+            self.kv.delete(self._pkey(r - 1, self.host_id))
+            self.kv.delete(self._vkey(r - 1))
+        self._round = r + 1
+        return GatherResult(round=r, payloads=payloads,
+                            fold=[int(h) for h in verdict["fold"]],
+                            removed=[int(h) for h in verdict["removed"]],
+                            joined=[int(h) for h in verdict["joined"]],
+                            members=self.members_for(r + 1))
+
+    def _obtain_verdict(self, r: int, my_write_ok: bool) -> Dict[str, Any]:
+        """Wait for (or produce) round r's membership verdict.
+
+        Rank k in the live candidate order may decide and publish only
+        once every lower-ranked candidate's heartbeat is stale — rank 0
+        (the arbiter) decides immediately. First verdict write wins;
+        everyone folds the winner's.
+
+        The wait is LIVENESS-bounded, not wall-clock-bounded: a verdict
+        may legitimately be arbitrarily late (the arbiter is waiting on
+        a slow-but-alive host, which must not be removed), so the
+        ``verdict_timeout`` clock restarts whenever any potential
+        decider's heartbeat advances and only expires after that long
+        with zero decider liveness. A fenced marker for this host ends
+        the wait immediately (its verdict may already be GC'd).
+        """
+        lower = [h for h in self.members_for(r) if h < self.host_id]
+        mon = _HeartbeatMonitor(self)
+        stamps: Dict[int, Optional[bytes]] = {}
+        deadline = time.monotonic() + self.verdict_timeout
+        while True:
+            raw = self.kv.try_get(self._vkey(r))
+            if raw is not None:
+                return json.loads(raw.decode())
+            marker = self.kv.try_get(self._fenced_key(self.host_id))
+            if (marker is not None and int(marker)
+                    >= self._active.get(self.host_id, 0)):
+                # a marker from before this incarnation's admission is
+                # stale; one at/after it means the survivors removed us
+                self._fenced = True
+                raise FencedHostError(
+                    f"host {self.host_id} was fenced before round {r}'s "
+                    f"verdict (removed by the survivors)")
+            if all(mon.stale(h) for h in lower):
+                verdict = self._decide(r, my_write_ok, mon)
+                try:
+                    self.kv.set(self._vkey(r),
+                                json.dumps(verdict).encode())
+                except KVKeyExists:
+                    continue          # lost the race; fold the winner's
+                return verdict
+            for h in lower:
+                stamp = self.kv.try_get(self._hbkey(h))
+                if stamps.get(h, b"") != stamp:
+                    stamps[h] = stamp
+                    deadline = time.monotonic() + self.verdict_timeout
+            if time.monotonic() > deadline:
+                raise KVTimeout(f"no verdict for round {r} after "
+                                f"{self.verdict_timeout}s without any "
+                                f"decider liveness")
+            time.sleep(self.poll_interval)
+
+    def _decide(self, r: int, my_write_ok: bool,
+                mon: _HeartbeatMonitor) -> Dict[str, Any]:
+        """Acting-arbiter path: collect round-r payloads with a
+        heartbeat-bounded wait, declare frozen hosts dead, admit
+        pending rejoiners."""
+        t0 = time.monotonic()
+        fold = [self.host_id] if my_write_ok else []
+        waiting = set(h for h in self.members_for(r)
+                      if h != self.host_id)
+        dead: set = set() if my_write_ok else {self.host_id}
+        while waiting:
+            for h in sorted(waiting):
+                if self.kv.try_get(self._pkey(r, h)) is not None:
+                    fold.append(h)
+                    waiting.discard(h)
+                elif mon.stale(h):
+                    dead.add(h)
+                    waiting.discard(h)
+            if waiting:
+                time.sleep(self.poll_interval)
+        active = {h: a for h, a in self._active.items() if h not in dead}
+        joined = []
+        if self.kv.try_get(self._rejoin_flag()) is not None:
+            for h in range(self.num_hosts):
+                if (h not in active
+                        and self.kv.try_get(self._rejoin_key(h))
+                        is not None):
+                    # admitted past any in-flight overlapped batches
+                    active[h] = r + self.pipeline_depth + 1
+                    joined.append(h)
+        return {"round": r, "fold": sorted(int(h) for h in fold),
+                "active": {str(h): int(a) for h, a in active.items()},
+                "removed": sorted(int(h) for h in dead),
+                "joined": sorted(int(h) for h in joined),
+                "detect_s": (round(time.monotonic() - t0, 3)
+                             if dead else 0.0)}
+
+    def _apply_verdict(self, r: int, verdict: Dict[str, Any]):
+        self._active = {int(h): int(a)
+                        for h, a in verdict["active"].items()}
+        removed = [int(h) for h in verdict["removed"]]
+        joined = [int(h) for h in verdict["joined"]]
+        if removed or joined:
+            self.reconfigurations.append({
+                "round": r, "removed": removed, "joined": joined,
+                "members_after": self.members_for(r + 1),
+                "detect_s": float(verdict.get("detect_s", 0.0))})
+        for h in removed:
+            self._pending_acks.pop(h, None)
+            # durable removal marker (idempotent; every host writes the
+            # same round) — a falsely-removed host waking after its
+            # verdict was GC'd still learns it was fenced. The marker
+            # carries the removal round so a later re-admitted
+            # incarnation (active_from > r) knows to ignore it.
+            self.kv.set(self._fenced_key(h), str(r).encode(),
+                        overwrite=True)
+            # the dead host never GC'd its previous-round key
+            self.kv.delete(self._pkey(r - 1, h))
+        # joins AFTER removals: a host killed and respawned fast enough
+        # can be removed and re-admitted by the same verdict — its
+        # pending ack must survive
+        for h in joined:
+            self._pending_acks[h] = self._active[h] - 1
+
+    # ----------------------------------------------------------- rejoin
+    def post_fold(self, state_blob: bytes, selected: int):
+        """Serving-loop hook, called after each fold with the merged
+        controller state and the stream position. The acting arbiter
+        acks rejoiners whose admission round has just been folded."""
+        r = self._round - 1
+        due = sorted(h for h, ar in self._pending_acks.items() if ar <= r)
+        if not due:
+            return
+        if self.host_id == min(self.members_for(r)):
+            for h in due:
+                ack = {"state_b64":
+                       base64.b64encode(state_blob).decode(),
+                       "selected": int(selected),
+                       "first_round": int(self._pending_acks[h]) + 1,
+                       "ns": self._ns,
+                       "active": {str(k): int(a)
+                                  for k, a in self._active.items()}}
+                self.kv.set(self._ack_key(h), json.dumps(ack).encode(),
+                            overwrite=True)
+                self.kv.delete(self._rejoin_key(h))
+            # a joiner still waiting re-asserts the flag within a second
+            self.kv.delete(self._rejoin_flag())
+        for h in due:
+            self._pending_acks.pop(h, None)
+
+    def request_rejoin(self, timeout_s: float = 600.0) -> RejoinAck:
+        """Rejoin path for a respawned host (constructed with
+        ``rejoin=True``): request admission, download the merged state
+        and stream position, adopt the cluster's namespace/membership.
+        The caller restores the controller from ``ack.state``, skips
+        ``ack.selected`` stream samples, and serves; its first gather is
+        ``ack.first_round``. Requires the stream to still have batches
+        left — a cluster that finishes first never acks."""
+        deadline = time.monotonic() + timeout_s
+        while True:
+            # re-asserted every poll: the flag is consumed whenever the
+            # arbiter acks a batch of joiners, and a concurrent joiner
+            # must not be left flagless
+            self.kv.set(self._rejoin_key(self.host_id), b"1",
+                        overwrite=True)
+            self.kv.set(self._rejoin_flag(), b"1", overwrite=True)
+            try:
+                raw = self.kv.get(self._ack_key(self.host_id),
+                                  min(1.0, timeout_s))
+                break
+            except KVTimeout:
+                if time.monotonic() > deadline:
+                    raise
+        ack = json.loads(raw.decode())
+        self._ns = ack["ns"]
+        self._active = {int(h): int(a)
+                        for h, a in ack["active"].items()}
+        self._round = int(ack["first_round"])
+        self.kv.delete(self._ack_key(self.host_id))
+        state = state_from_bytes(base64.b64decode(ack["state_b64"]))
+        return RejoinAck(state=state, selected=int(ack["selected"]),
+                         first_round=self._round,
+                         members=self.members_for(self._round))
+
+    # ------------------------------------------------------------ close
+    def close(self):
+        """Bounded-barrier close over the final membership, then GC.
+
+        Unlike `CoordinatorExchange.close`, a missing participant (the
+        cluster just survived a failure, or a host crashed between the
+        last fold and close) times out cleanly after a bounded wait
+        instead of wedging the survivors.
+        """
+        try:
+            if self._fenced or self._ns is None or self._round == 0:
+                return
+            self.kv.set(f"{self._ns}/close/{self.host_id}", b"1",
+                        overwrite=True)
+            try:
+                for h in self.members_for(self._round):
+                    if h != self.host_id:
+                        self.kv.get(f"{self._ns}/close/{h}",
+                                    max(2 * self.heartbeat_timeout, 5.0))
+            except KVTimeout:
+                pass
+            self.kv.delete(self._pkey(self._round - 1, self.host_id))
+            self.kv.delete(self._vkey(self._round - 1))
+            self.kv.delete(self._hbkey(self.host_id))
+        finally:
+            self._hb_stop.set()
+
+
+def default_kv():
+    """The KV transport for this worker: FileKV when `ENV_KV_DIR` is set
+    (coordinator-free cluster), else the jax.distributed coordinator."""
+    kv_dir = os.environ.get(ENV_KV_DIR)
+    if kv_dir:
+        return FileKV(kv_dir)
+    return CoordinatorKV()
+
+
+def make_resilient_exchange(*, heartbeat_timeout: float = 5.0,
+                            heartbeat_interval: float = 0.25,
+                            pipeline_depth: int = 0,
+                            rejoin: Optional[bool] = None,
+                            kv=None) -> ResilientExchange:
+    """Build the fault-tolerant exchange for this worker from its
+    environment (identity, transport, rejoin flag, fault plan)."""
+    host_id, num_hosts = cluster_identity()
+    if rejoin is None:
+        rejoin = os.environ.get(ENV_REJOIN) == "1"
+    return ResilientExchange(
+        kv if kv is not None else default_kv(),
+        host_id=host_id, num_hosts=num_hosts,
+        heartbeat_timeout=heartbeat_timeout,
+        heartbeat_interval=heartbeat_interval,
+        pipeline_depth=pipeline_depth, rejoin=bool(rejoin),
+        injector=FaultInjector.from_env(host_id))
+
+
+def ft_serving_context(*, heartbeat_timeout: float = 5.0,
+                       heartbeat_interval: float = 0.25,
+                       pipeline_depth: int = 0):
+    """Worker-side fault-tolerant setup: ``(exchange, init_state, skip)``.
+
+    Fresh workers get ``(exchange, None, 0)``. Respawned workers
+    (`ENV_REJOIN`) block on the rejoin ack and get the restored
+    controller snapshot plus the number of already-consumed stream
+    samples to skip (pass both to `serve_stream_distributed` along with
+    ``stream_offset=skip``).
+    """
+    start_worker_heartbeat()
+    exchange = make_resilient_exchange(
+        heartbeat_timeout=heartbeat_timeout,
+        heartbeat_interval=heartbeat_interval,
+        pipeline_depth=pipeline_depth)
+    init_state, skip = None, 0
+    if os.environ.get(ENV_REJOIN) == "1":
+        ack = exchange.request_rejoin()
+        init_state, skip = ack.state, ack.selected
+    return exchange, init_state, skip
 
 
 def _pack_host_update(shard: ShardUpdate, preds: np.ndarray) -> bytes:
@@ -202,7 +793,12 @@ def serve_stream_distributed(runtime: EdgeCloudRuntime, params, stream,
                              side_info: bool = False, beta: float = 1.0,
                              max_samples: int = 0,
                              labels_for_accounting: bool = True,
-                             exchange=None) -> Dict[str, Any]:
+                             exchange=None, fault_tolerant: bool = False,
+                             heartbeat_timeout: float = 5.0,
+                             heartbeat_interval: float = 0.25,
+                             init_state: Optional[Dict[str, Any]] = None,
+                             stream_offset: int = 0,
+                             record_states: bool = False) -> Dict[str, Any]:
     """Serve a sample stream across all processes of a jax.distributed run.
 
     Same contract as `serve_stream_sharded` — ``replicas`` is the
@@ -215,15 +811,43 @@ def serve_stream_distributed(runtime: EdgeCloudRuntime, params, stream,
 
     ``exchange``  cross-host transport (testing hook). Defaults to
                   `CoordinatorExchange` in a multi-process run and
-                  `LoopbackExchange` in a single-process one.
+                  `LoopbackExchange` in a single-process one — or a
+                  `ResilientExchange` when ``fault_tolerant`` is set.
+    ``fault_tolerant``  survive worker failure: heartbeat-bounded
+                  gathers, per-round membership verdicts, and re-slicing
+                  over the surviving hosts (see `ResilientExchange`).
+                  The failure epoch's un-gathered slices are the only
+                  loss (their preds are reported as -1 and excluded from
+                  accuracy accounting); from the next epoch on the
+                  controller evolves bit-identically to a smaller
+                  cluster seeded with the merged state.
+    ``heartbeat_timeout`` / ``heartbeat_interval``  liveness knobs for
+                  the default fault-tolerant exchange.
+    ``init_state``  controller snapshot (`SplitEEController.snapshot`)
+                  to restore before serving — the rejoin path.
+    ``stream_offset``  number of stream samples the caller already
+                  skipped (rejoin): keeps the rejoin acks this host may
+                  write as acting arbiter in global stream coordinates.
+    ``record_states``  append a post-fold snapshot of (q, n, t) plus a
+                  wall-clock stamp per micro-batch under ``"states"`` —
+                  the fault tests' bit-identity probe and the fault
+                  benchmark's recovery-latency probe.
     """
     if overlap_depth < 1:
         raise ValueError(f"overlap_depth must be >= 1, got {overlap_depth}")
     if exchange is None:
-        exchange = (CoordinatorExchange() if jax.process_count() > 1
-                    else LoopbackExchange())
+        if fault_tolerant:
+            exchange = make_resilient_exchange(
+                heartbeat_timeout=heartbeat_timeout,
+                heartbeat_interval=heartbeat_interval,
+                pipeline_depth=overlap_depth if overlap else 0)
+        else:
+            exchange = (CoordinatorExchange() if jax.process_count() > 1
+                        else LoopbackExchange())
+    ft = bool(getattr(exchange, "fault_tolerant", False))
     num_hosts = exchange.num_hosts
     host_id = exchange.host_id
+    round_base = exchange.next_round if ft else 0
 
     if mesh is None:
         mesh = make_serving_mesh(replicas)
@@ -234,20 +858,33 @@ def serve_stream_distributed(runtime: EdgeCloudRuntime, params, stream,
                             param_shardings(mesh, params, axis_map=amap))
 
     ctl = SplitEEController(cost, beta=beta, side_info=side_info)
+    if init_state is not None:
+        ctl.restore(init_state)
     queue = OffloadQueue(runtime, params, put=put)
     correct, preds = [], []
+    states: List[Dict[str, Any]] = []
     n = 0
     overlapped = 0
+    lost = 0
+    next_round = [round_base]      # gather round of the next batch
 
     def process_batch(batch, start: int) -> _BatchCtx:
         """Select the full batch's arms; launch only my host's slice."""
         B = len(batch)
         arms = ctl.choose_splits(B)          # identical on every host
         # contiguous per-host slice of this batch — only my rows are
-        # ever materialized (other hosts' samples stay untouched)
-        sizes = _shard_sizes(B, num_hosts)
-        lo = sum(sizes[:host_id])
-        hi = lo + sizes[host_id]
+        # ever materialized (other hosts' samples stay untouched). In
+        # fault-tolerant mode the slicing membership is per-round (it
+        # shrinks on failure and grows on rejoin, identically on every
+        # surviving host because membership only changes at verdicts).
+        rnd = next_round[0]
+        next_round[0] += 1
+        members = (exchange.members_for(rnd) if ft
+                   else list(range(num_hosts)))
+        sizes = _shard_sizes(B, len(members))
+        slot = members.index(host_id)
+        lo = sum(sizes[:slot])
+        hi = lo + sizes[slot]
         seq_len = int(np.asarray(batch[0]["tokens"]).shape[-1])
         if hi > lo:
             tokens = np.stack([np.asarray(s["tokens"])
@@ -265,37 +902,71 @@ def serve_stream_distributed(runtime: EdgeCloudRuntime, params, stream,
                   for s in batch]
         return _BatchCtx(arms=arms[lo:hi], conf_paths=conf_paths,
                          batch_preds=batch_preds, labels=labels,
-                         seq_len=seq_len, pending=pending, start=start)
+                         seq_len=seq_len, pending=pending, start=start,
+                         members=members)
 
     def finalize(ctx: _BatchCtx):
         """Resolve the local flush, exchange summaries, fold all hosts."""
-        nonlocal n, overlapped
+        nonlocal n, overlapped, lost
         B = len(ctx.labels)
         # my slice's cloud results (slots are slice-local indices)
         conf_Ls, obs = _resolve_cloud(runtime, ctx)
         shard = ctl.prepare_shard_update(ctx.arms, ctx.conf_paths,
                                          conf_Ls, obs)
-        # host-side all-gather, then the identical fold on every process
-        payloads = exchange.allgather_bytes(
-            _pack_host_update(shard, np.asarray(ctx.batch_preds, np.int64)))
-        unpacked = [_unpack_host_update(p) for p in payloads]
-        ctl.merge_cross_host([[shard] for shard, _ in unpacked])
-        batch_preds = [int(p) for _, host_preds in unpacked
-                       for p in host_preds]
-        assert len(batch_preds) == B
+        payload = _pack_host_update(
+            shard, np.asarray(ctx.batch_preds, np.int64))
+        if ft:
+            # bounded gather + membership verdict; fold exactly the
+            # verdict's shard set (identical on every surviving host)
+            res = exchange.gather(payload)
+            sizes = _shard_sizes(B, len(ctx.members))
+            bounds, lo = {}, 0
+            for h, size in zip(ctx.members, sizes):
+                bounds[h] = (lo, lo + size)
+                lo += size
+            batch_preds = [-1] * B       # -1 = slice lost with its host
+            per_host, kept = [], 0
+            for h, raw in zip(res.fold, res.payloads):
+                sh, host_preds = _unpack_host_update(raw)
+                blo, bhi = bounds[h]
+                assert len(host_preds) == bhi - blo
+                batch_preds[blo:bhi] = [int(p) for p in host_preds]
+                per_host.append([sh])
+                kept += bhi - blo
+            ctl.merge_cross_host(per_host)
+            lost += B - kept
+            exchange.post_fold(state_to_bytes(ctl.state),
+                               stream_offset + ctx.start + B)
+        else:
+            # host-side all-gather, then the identical fold everywhere
+            payloads = exchange.allgather_bytes(payload)
+            unpacked = [_unpack_host_update(p) for p in payloads]
+            ctl.merge_cross_host([[sh] for sh, _ in unpacked])
+            batch_preds = [int(p) for _, host_preds in unpacked
+                           for p in host_preds]
+            assert len(batch_preds) == B
         preds.extend(batch_preds)
         if labels_for_accounting:
             for s in range(B):
-                if ctx.labels[s] is not None:
+                if ctx.labels[s] is not None and batch_preds[s] >= 0:
                     correct.append(int(batch_preds[s] == ctx.labels[s]))
+        if record_states:
+            snap = ctl.snapshot()
+            snap["wall"] = time.monotonic()
+            states.append(snap)
         if ctx.overlapped:
             overlapped += 1
         n += B
 
-    batches = _drive_pipeline(
-        stream, batch_size=batch_size, max_samples=max_samples,
-        overlap=overlap, overlap_depth=overlap_depth,
-        process_batch=process_batch, finalize=finalize)
+    try:
+        batches = _drive_pipeline(
+            stream, batch_size=batch_size, max_samples=max_samples,
+            overlap=overlap, overlap_depth=overlap_depth,
+            process_batch=process_batch, finalize=finalize)
+    except BaseException:
+        if ft:
+            exchange.close()     # bounded cleanup; never wedges
+        raise
     exchange.close()
 
     out = _serve_result(ctl, n=n, batch_size=batch_size, replicas=replicas,
@@ -304,6 +975,15 @@ def serve_stream_distributed(runtime: EdgeCloudRuntime, params, stream,
                         overlapped=overlapped)
     out["distributed"] = {"num_hosts": num_hosts, "host_id": host_id,
                           "local_replicas": replicas}
+    if ft:
+        out["distributed"].update({
+            "fault_tolerant": True,
+            "members_final": exchange.members,
+            "reconfigurations": exchange.reconfigurations,
+            "lost_samples": lost,
+        })
+    if record_states:
+        out["states"] = states
     return out
 
 
@@ -317,11 +997,200 @@ def _free_port() -> int:
         return s.getsockname()[1]
 
 
+@dataclasses.dataclass
+class WorkerIncident:
+    """One supervisor observation: a worker died, hung, or was respawned."""
+    kind: str                      # "exit" | "hung" | "respawn"
+    slot: int                      # process id (cluster slot)
+    returncode: Optional[int]
+    at: float                      # seconds since cluster start
+
+
+@dataclasses.dataclass
+class ClusterReport:
+    """What `run_supervised_cluster` observed and collected."""
+    completed: List[subprocess.CompletedProcess]   # final incarnations
+    incidents: List[WorkerIncident]
+    respawns: Dict[int, int]                       # slot -> respawn count
+
+
+class _Worker:
+    """One worker incarnation: its process, pipe drain, and liveness."""
+
+    def __init__(self, slot: int, proc: subprocess.Popen,
+                 hb_path: Optional[str]):
+        self.slot = slot
+        self.proc = proc
+        self.hb_path = hb_path
+        self.spawned_wall = time.time()
+        self.handled = False
+        self.out: Optional[tuple] = None
+        # all pipes drain concurrently — a worker stalled on a full pipe
+        # would stop answering the exchange and wedge the whole cluster
+        self.thread = threading.Thread(target=self._drain, daemon=True)
+        self.thread.start()
+
+    def _drain(self):
+        stdout, stderr = self.proc.communicate()
+        self.out = (self.proc.returncode, stdout, stderr)
+
+    def hb_stale(self, watchdog_timeout: float,
+                 startup_grace: float) -> bool:
+        try:
+            mtime = os.path.getmtime(self.hb_path)
+        except OSError:
+            mtime = None
+        now = time.time()
+        if mtime is None:     # not stamping yet (still importing/booting)
+            return now - self.spawned_wall > startup_grace
+        return now - max(mtime, self.spawned_wall) > watchdog_timeout
+
+
+def run_supervised_cluster(
+        worker_src: str, num_processes: int, *,
+        devices_per_process: int = 1, env: Optional[Dict[str, str]] = None,
+        timeout: Optional[float] = 900.0, cwd: Optional[str] = None,
+        coordinator: bool = True, fail_fast: bool = True,
+        watchdog_timeout: Optional[float] = None,
+        startup_grace: float = 120.0,
+        respawn: bool = False, max_respawns: int = 1,
+        respawn_env: Optional[Dict[str, str]] = None) -> ClusterReport:
+    """Spawn and supervise N python workers as one serving cluster.
+
+    The engine behind `run_distributed_subprocesses`, grown a supervisor
+    mode for the fault-tolerant runtime:
+
+    ``coordinator``       set the SPLITEE_COORDINATOR var so workers
+                          bootstrap jax.distributed (the classic
+                          cluster). False for FileKV clusters — workers
+                          keep single-process jax and exchange through
+                          `ENV_KV_DIR` (the caller puts it in ``env``).
+    ``fail_fast``         kill the cluster as soon as any worker exits
+                          non-zero (the survivors of a NON-fault-
+                          tolerant run can never complete their
+                          exchange). Turn off for fault-tolerant runs,
+                          where survivors are expected to finish.
+    ``watchdog_timeout``  liveness watchdog for HUNG workers: each
+                          worker gets a heartbeat file (stamped by
+                          `start_worker_heartbeat`); a running worker
+                          whose stamps have frozen for this long is
+                          killed (and then handled like any dead
+                          worker). Without it a SIGSTOP'd or deadlocked
+                          worker blocks the cluster until ``timeout`` —
+                          exit-based fail-fast never fires for a
+                          process that refuses to die.
+    ``startup_grace``     how long a worker may take to produce its
+                          first heartbeat stamp (imports, jax init)
+                          before the watchdog treats it as hung.
+    ``respawn``           supervisor mode: respawn a dead worker (up to
+                          ``max_respawns`` times per slot) with
+                          `ENV_REJOIN` set, so it takes the rejoin path
+                          and re-enters the cluster at an epoch
+                          boundary from the KV-store state.
+    """
+    port = _free_port() if coordinator else None
+    hb_dir = (tempfile.mkdtemp(prefix="splitee-hb-")
+              if watchdog_timeout is not None else None)
+    t0 = time.monotonic()
+
+    def spawn(slot: int, extra: Optional[Dict[str, str]] = None) -> _Worker:
+        penv = dict(os.environ)
+        penv.update(env or {})
+        if coordinator:
+            penv[ENV_COORDINATOR] = f"localhost:{port}"
+        penv[ENV_NUM_PROCESSES] = str(num_processes)
+        penv[ENV_PROCESS_ID] = str(slot)
+        hb_path = None
+        if hb_dir is not None:
+            hb_path = os.path.join(hb_dir, f"hb-{slot}")
+            # a dead incarnation's stale file must not cost the respawn
+            # its startup grace (hb_stale's missing-file branch)
+            try:
+                os.unlink(hb_path)
+            except OSError:
+                pass
+            penv[ENV_WORKER_HEARTBEAT] = hb_path
+        xla = penv.get("XLA_FLAGS", "")
+        if "--xla_force_host_platform_device_count" not in xla:
+            penv["XLA_FLAGS"] = (
+                xla + " --xla_force_host_platform_device_count"
+                f"={devices_per_process}").strip()
+        penv.update(extra or {})
+        proc = subprocess.Popen(
+            [sys.executable, "-c", worker_src], env=penv, cwd=cwd,
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+        return _Worker(slot, proc, hb_path)
+
+    current: Dict[int, _Worker] = {s: spawn(s)
+                                   for s in range(num_processes)}
+    all_workers: List[_Worker] = list(current.values())
+    incidents: List[WorkerIncident] = []
+    respawns: Dict[int, int] = {s: 0 for s in range(num_processes)}
+
+    deadline = None if timeout is None else t0 + timeout
+    timed_out = False
+    tearing_down = False
+    while True:
+        now = time.monotonic()
+        if watchdog_timeout is not None and not tearing_down:
+            for w in current.values():
+                if (w.proc.poll() is None
+                        and w.hb_stale(watchdog_timeout, startup_grace)):
+                    incidents.append(WorkerIncident(
+                        "hung", w.slot, None, round(now - t0, 3)))
+                    w.proc.kill()      # SIGKILL works on stopped procs
+        for w in list(current.values()):
+            rc = w.proc.poll()
+            if rc is None or w.handled:
+                continue
+            w.handled = True
+            if rc == 0 or tearing_down:
+                continue
+            incidents.append(WorkerIncident(
+                "exit", w.slot, rc, round(now - t0, 3)))
+            if respawn and respawns[w.slot] < max_respawns:
+                respawns[w.slot] += 1
+                incidents.append(WorkerIncident(
+                    "respawn", w.slot, rc, round(now - t0, 3)))
+                extra = {ENV_REJOIN: "1"}
+                extra.update(respawn_env or {})
+                w2 = spawn(w.slot, extra)
+                current[w.slot] = w2
+                all_workers.append(w2)
+            elif fail_fast:
+                # a crashed worker of a lockstep cluster can never
+                # answer the exchange; surface the crash in seconds
+                tearing_down = True
+                time.sleep(0.5)        # let its last writes flush
+                for o in current.values():
+                    if o.proc.poll() is None:
+                        o.proc.kill()
+        if all(w.proc.poll() is not None for w in current.values()):
+            break
+        if deadline is not None and now > deadline:
+            timed_out = True
+            for w in current.values():
+                if w.proc.poll() is None:
+                    w.proc.kill()
+            break
+        time.sleep(0.15)
+    for w in all_workers:
+        w.thread.join()
+    if timed_out:
+        raise subprocess.TimeoutExpired(
+            current[0].proc.args, timeout or 0)
+    completed = [subprocess.CompletedProcess(
+        current[s].proc.args, *current[s].out)
+        for s in range(num_processes)]
+    return ClusterReport(completed=completed, incidents=incidents,
+                         respawns=respawns)
+
+
 def run_distributed_subprocesses(
         worker_src: str, num_processes: int, *,
         devices_per_process: int = 1, env: Optional[Dict[str, str]] = None,
         timeout: Optional[float] = 900.0, cwd: Optional[str] = None,
-) -> List[subprocess.CompletedProcess]:
+        **supervisor_kwargs) -> List[subprocess.CompletedProcess]:
     """Spawn N python workers wired into one localhost jax.distributed run.
 
     Each worker executes ``worker_src`` (a `python -c` program that must
@@ -336,67 +1205,25 @@ def run_distributed_subprocesses(
     (interactive drivers). All workers' pipes are drained concurrently —
     a worker stalled on a full pipe would stop answering the KV-store
     exchange and wedge every other worker with it. A worker exiting
-    non-zero fails fast: the survivors can never complete the exchange
-    (they would block until their KV timeouts), so they are killed
-    immediately and the crash surfaces in seconds, not minutes.
+    non-zero fails fast by default: the survivors can never complete the
+    exchange (they would block until their KV timeouts), so they are
+    killed immediately and the crash surfaces in seconds, not minutes.
+
+    Extra keyword arguments (``fail_fast=False``, ``watchdog_timeout``,
+    ``respawn``, ``coordinator=False``, ...) select the supervisor
+    behaviors of `run_supervised_cluster`, which this wraps.
     """
-    port = _free_port()
-    procs: List[subprocess.Popen] = []
-    for pid in range(num_processes):
-        penv = dict(os.environ)
-        penv.update(env or {})
-        penv[ENV_COORDINATOR] = f"localhost:{port}"
-        penv[ENV_NUM_PROCESSES] = str(num_processes)
-        penv[ENV_PROCESS_ID] = str(pid)
-        xla = penv.get("XLA_FLAGS", "")
-        if "--xla_force_host_platform_device_count" not in xla:
-            penv["XLA_FLAGS"] = (
-                xla + " --xla_force_host_platform_device_count"
-                f"={devices_per_process}").strip()
-        procs.append(subprocess.Popen(
-            [sys.executable, "-c", worker_src], env=penv, cwd=cwd,
-            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True))
-
-    results: List[Optional[tuple]] = [None] * num_processes
-
-    def drain(i: int, p: subprocess.Popen):
-        stdout, stderr = p.communicate()   # returns once p exits/is killed
-        results[i] = (p.returncode, stdout, stderr)
-
-    threads = [threading.Thread(target=drain, args=(i, p), daemon=True)
-               for i, p in enumerate(procs)]
-    for t in threads:
-        t.start()
-
-    deadline = None if timeout is None else time.monotonic() + timeout
-    timed_out = False
-    while True:
-        states = [p.poll() for p in procs]
-        if all(s is not None for s in states):
-            break
-        if any(s is not None and s != 0 for s in states):
-            # fail fast: a crashed worker can never answer the exchange
-            time.sleep(0.5)            # let its last writes flush
-            for q in procs:
-                if q.poll() is None:
-                    q.kill()
-            break
-        if deadline is not None and time.monotonic() > deadline:
-            timed_out = True
-            for q in procs:
-                q.kill()
-            break
-        time.sleep(0.2)
-    for t in threads:
-        t.join()
-    if timed_out:
-        raise subprocess.TimeoutExpired(procs[0].args, timeout or 0)
-    return [subprocess.CompletedProcess(p.args, rc, out, err)
-            for p, (rc, out, err) in zip(procs, results)]
+    report = run_supervised_cluster(
+        worker_src, num_processes,
+        devices_per_process=devices_per_process, env=env,
+        timeout=timeout, cwd=cwd, **supervisor_kwargs)
+    return report.completed
 
 
 def respawn_distributed(num_processes: int, *, devices_per_process: int = 1,
                         timeout: Optional[float] = None,
+                        env: Optional[Dict[str, str]] = None,
+                        **supervisor_kwargs,
                         ) -> List[subprocess.CompletedProcess]:
     """Re-run the current program as an N-process distributed cluster.
 
@@ -404,9 +1231,13 @@ def respawn_distributed(num_processes: int, *, devices_per_process: int = 1,
     `examples/serve_splitee.py --distributed`: each worker re-executes
     ``sys.argv`` verbatim (same flags, same deterministic testbed build)
     and detects worker mode via the SPLITEE_* env vars, so the program
-    needs no separate worker entry point. No timeout by default —
-    workers retrain the testbed, whose duration depends on the flags
-    being relayed; interrupt the driver to kill the cluster instead.
+    needs no separate worker entry point — a RESPAWNED worker rebuilds
+    the same testbed and rejoins via the fault-tolerant exchange. No
+    timeout by default — workers retrain the testbed, whose duration
+    depends on the flags being relayed; interrupt the driver to kill
+    the cluster instead. Supervisor behaviors (``coordinator=False``,
+    ``fail_fast``, ``respawn``, ``watchdog_timeout``, ...) pass through
+    to `run_supervised_cluster`.
     """
     argv = list(sys.argv)
     worker_src = (
@@ -416,21 +1247,33 @@ def respawn_distributed(num_processes: int, *, devices_per_process: int = 1,
         "run_name='__main__')")
     return run_distributed_subprocesses(
         worker_src, num_processes,
-        devices_per_process=devices_per_process, timeout=timeout)
+        devices_per_process=devices_per_process, timeout=timeout,
+        env=env, **supervisor_kwargs)
 
 
 def drive_respawned_cluster(num_processes: int, *,
-                            devices_per_process: int = 1):
-    """`respawn_distributed` + the standard driver epilogue: abort with
-    the failing worker's stderr if any worker exits non-zero, otherwise
-    echo host 0's output (workers gate their own prints to host 0)."""
+                            devices_per_process: int = 1,
+                            env: Optional[Dict[str, str]] = None,
+                            **supervisor_kwargs):
+    """`respawn_distributed` + the standard driver epilogue.
+
+    Host 0's output is echoed (workers gate their own prints to host 0).
+    In the default lockstep mode any non-zero worker aborts the driver;
+    in fault-tolerant runs (``fail_fast=False``) the cluster is expected
+    to outlive individual workers, so the driver aborts only when host 0
+    itself failed and otherwise reports casualties to stderr."""
     procs = respawn_distributed(num_processes,
-                                devices_per_process=devices_per_process)
+                                devices_per_process=devices_per_process,
+                                env=env, **supervisor_kwargs)
     failed = [(i, p) for i, p in enumerate(procs) if p.returncode != 0]
-    if failed:
+    fault_tolerant = supervisor_kwargs.get("fail_fast", True) is False
+    if failed and (not fault_tolerant or procs[0].returncode != 0):
         # workers killed by the fail-fast sweep show a signal returncode;
         # the crashed worker's own stderr carries the root cause
         raise SystemExit("\n".join(
             f"worker {i} exited {p.returncode}:\n{p.stderr[-3000:]}"
             for i, p in failed))
+    for i, p in failed:
+        print(f"[driver] worker {i} exited {p.returncode} "
+              f"(cluster continued without it)", file=sys.stderr)
     print(procs[0].stdout, end="")

@@ -1,0 +1,188 @@
+"""Pluggable key-value transports for the cross-host serving exchange.
+
+The distributed serving runtime (serving/distributed.py) deliberately
+uses NO device collective: the only cross-process coupling is a
+key-value store carrying O(B*L) bandit summaries per batch. That makes
+the transport pluggable, and this module provides the two backends the
+fault-tolerant exchange (`ResilientExchange`) runs over:
+
+* `CoordinatorKV` — the jax.distributed coordinator's KV service (the
+  production transport: already running, nothing extra to deploy);
+* `FileKV` — a directory on a shared filesystem, with atomic writes.
+  Process clusters on one machine can serve with NO jax.distributed
+  bootstrap at all, which is what makes worker death, respawn, and
+  rejoin testable: there is no cluster-membership registry to
+  re-register with, only keys.
+
+Both expose the same primitives:
+
+  set(key, value, overwrite=False)   first-writer-wins unless overwrite
+  try_get(key) -> Optional[bytes]    probe (non-blocking, or a short
+                                     bounded wait on the coordinator)
+  get(key, timeout_s) -> bytes       blocking read, KVTimeout on expiry
+  delete(key)                        idempotent
+
+First-writer-wins `set` is the concurrency primitive the exchange's
+arbiter failover relies on (two would-be arbiters race to publish a
+round verdict; exactly one wins and both fold the winner's).
+"""
+from __future__ import annotations
+
+import base64
+import os
+import tempfile
+import time
+from typing import List, Optional
+
+
+class KVTimeout(TimeoutError):
+    """A blocking `get` expired before the key appeared."""
+
+
+class KVKeyExists(RuntimeError):
+    """`set(..., overwrite=False)` lost a first-writer-wins race."""
+
+
+class FileKV:
+    """KV store over a directory: one file per key, atomic publication.
+
+    Writes go to a temp file first; publication is `os.link` (exclusive
+    — fails if the key exists, giving first-writer-wins) or `os.replace`
+    (overwrite). Readers therefore never observe partial values. Works
+    across processes sharing a filesystem; polling-based blocking reads.
+    """
+
+    def __init__(self, root: str, *, poll_interval: float = 0.02):
+        self.root = os.path.abspath(root)
+        self.poll_interval = poll_interval
+        os.makedirs(self.root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        parts = [p for p in key.split("/") if p not in ("", ".", "..")]
+        return os.path.join(self.root, *parts)
+
+    def set(self, key: str, value: bytes, *, overwrite: bool = False):
+        path = self._path(key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(prefix=".kv-", dir=os.path.dirname(path))
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(value)
+            if overwrite:
+                os.replace(tmp, path)
+                tmp = None
+            else:
+                try:
+                    os.link(tmp, path)
+                except FileExistsError:
+                    raise KVKeyExists(key) from None
+        finally:
+            if tmp is not None and os.path.exists(tmp):
+                os.unlink(tmp)
+
+    def try_get(self, key: str) -> Optional[bytes]:
+        try:
+            with open(self._path(key), "rb") as f:
+                return f.read()
+        except (FileNotFoundError, NotADirectoryError):
+            return None
+
+    def get(self, key: str, timeout_s: float) -> bytes:
+        deadline = time.monotonic() + timeout_s
+        while True:
+            value = self.try_get(key)
+            if value is not None:
+                return value
+            if time.monotonic() > deadline:
+                raise KVTimeout(f"key {key!r} absent after {timeout_s}s")
+            time.sleep(self.poll_interval)
+
+    def delete(self, key: str):
+        try:
+            os.unlink(self._path(key))
+        except (FileNotFoundError, NotADirectoryError, IsADirectoryError):
+            pass
+
+    def list_keys(self, prefix: str) -> List[str]:
+        path = self._path(prefix)
+        try:
+            names = os.listdir(path)
+        except (FileNotFoundError, NotADirectoryError):
+            return []
+        return sorted(f"{prefix.rstrip('/')}/{n}" for n in names
+                      if not n.startswith(".kv-"))
+
+
+class CoordinatorKV:
+    """KV store over the jax.distributed coordinator's control plane.
+
+    Thin adapter around `DistributedRuntimeClient`, behind the shared
+    primitive interface so the fault-tolerant exchange is
+    transport-agnostic. Values travel base64-encoded over the STRING
+    key-value API on purpose: in this jax pin the bytes API
+    (``blocking_key_value_get_bytes`` / ``key_value_dir_get_bytes``)
+    segfaults whenever the value is already present when the call is
+    issued (the immediate-return binding path is broken; only the
+    block-then-deliver path survives), which makes it unusable for any
+    polling protocol — and a latent crash even for lockstep gathers
+    whenever a peer wins the race. The string API is sound on every
+    path.
+
+    The client has no non-blocking read, so ``try_get`` is a blocking
+    get with a short probe timeout: callers poll at roughly
+    ``probe_timeout_ms`` cadence while a key is absent and return
+    immediately once it exists.
+    """
+
+    def __init__(self, client=None, *, probe_timeout_ms: int = 100):
+        if client is None:
+            from jax._src.distributed import global_state
+            client = global_state.client
+        if client is None:
+            raise RuntimeError(
+                "jax.distributed is not initialized — CoordinatorKV needs "
+                "the coordinator client (or use FileKV for "
+                "coordinator-free clusters)")
+        self._client = client
+        self._probe_ms = probe_timeout_ms
+
+    def set(self, key: str, value: bytes, *, overwrite: bool = False):
+        try:
+            self._client.key_value_set(
+                key, base64.b64encode(value).decode("ascii"),
+                allow_overwrite=overwrite)
+        except Exception as e:  # XlaRuntimeError: ALREADY_EXISTS
+            if not overwrite and "ALREADY_EXISTS" in str(e):
+                raise KVKeyExists(key) from None
+            raise
+
+    def try_get(self, key: str) -> Optional[bytes]:
+        try:
+            return base64.b64decode(
+                self._client.blocking_key_value_get(key, self._probe_ms))
+        except Exception as e:
+            if _is_deadline(e):
+                return None
+            raise
+
+    def get(self, key: str, timeout_s: float) -> bytes:
+        try:
+            return base64.b64decode(
+                self._client.blocking_key_value_get(
+                    key, int(timeout_s * 1000)))
+        except Exception as e:
+            if _is_deadline(e):
+                raise KVTimeout(
+                    f"key {key!r} absent after {timeout_s}s") from None
+            raise
+
+    def delete(self, key: str):
+        try:
+            self._client.key_value_delete(key)
+        except Exception:
+            pass
+
+
+def _is_deadline(e: Exception) -> bool:
+    msg = str(e)
+    return "DEADLINE_EXCEEDED" in msg or "timed out" in msg.lower()

@@ -88,6 +88,7 @@ class _BatchCtx:
     pending: Any                      # PendingFlush
     start: int = 0                    # global round index of first sample
     overlapped: bool = False
+    members: Optional[List[int]] = None   # FT: hosts this batch sliced over
 
 
 def _drive_pipeline(stream, *, batch_size: int, max_samples: int,

@@ -1,0 +1,164 @@
+"""Property tests for the controller's merge algebra.
+
+The fault-tolerant rebuild path silently relies on two algebraic facts
+about `SplitEEController.merge_shard_updates` / `merge_cross_host`:
+
+* **associativity (bitwise)** — folding a shard sequence in one call is
+  bit-identical to folding any contiguous grouping of it across several
+  calls (each fold replays the same sequential arithmetic). This is
+  exactly what lets a rejoined host resume from a mid-stream snapshot:
+  its [fold rounds 0..e] + [fold rounds e+1..] equals the survivors'
+  single uninterrupted fold.
+* **order-invariance (statistical)** — permuting the shard order leaves
+  the pull counts and round counter exactly unchanged and moves the
+  mean rewards only within floating-point tolerance; the fold order is
+  a tie-break, not a semantic choice. (Bitwise identity across hosts
+  comes from every host folding the SAME verdict order — pinned by the
+  cluster tests — not from float addition commuting.)
+
+Runs under real `hypothesis` when available, else the vendored
+deterministic fallback.
+"""
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                  # pragma: no cover
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import CostModel, SplitEEController
+
+
+def _random_shards(seed: int, L: int, n_shards: int, side_info: bool):
+    rng = np.random.default_rng(seed)
+    cost = CostModel(num_layers=L, alpha=float(rng.uniform(0.4, 0.9)),
+                     offload=float(rng.uniform(1.0, 6.0)))
+    ctl = SplitEEController(cost, side_info=side_info)   # prepare is pure
+    shards = []
+    for _ in range(n_shards):
+        B = int(rng.integers(1, 7))
+        arms = rng.integers(0, L, B)
+        paths = [rng.uniform(0.05, 0.99, int(a) + 1) if side_info
+                 else rng.uniform(0.05, 0.99, 1) for a in arms]
+        conf_L = [None if rng.random() < 0.5
+                  else float(rng.uniform(0.3, 0.99)) for _ in range(B)]
+        obs = list(rng.integers(0, 10_000, B))
+        shards.append(ctl.prepare_shard_update(arms, paths, conf_L, obs))
+    return cost, shards
+
+
+def _fold(cost, side_info, groups):
+    """Fresh controller folding ``groups`` (one merge call per group)."""
+    ctl = SplitEEController(cost, side_info=side_info)
+    for g in groups:
+        ctl.merge_shard_updates(list(g))
+    return ctl
+
+
+def _grouping(shards, seed):
+    """Deterministic random contiguous grouping of a shard list."""
+    rng = np.random.default_rng(seed)
+    cuts = sorted(set(rng.integers(1, len(shards) + 1,
+                                   rng.integers(0, len(shards)))))
+    groups, lo = [], 0
+    for cut in cuts + [len(shards)]:
+        if cut > lo:
+            groups.append(shards[lo:cut])
+            lo = cut
+    return groups
+
+
+def _assert_states_bitwise(a: SplitEEController, b: SplitEEController):
+    np.testing.assert_array_equal(np.asarray(a.state.q),
+                                  np.asarray(b.state.q))
+    np.testing.assert_array_equal(np.asarray(a.state.n),
+                                  np.asarray(b.state.n))
+    assert int(a.state.t) == int(b.state.t)
+
+
+@given(st.integers(0, 10**6), st.integers(2, 6), st.integers(1, 6))
+@settings(max_examples=15, deadline=None)
+def test_merge_is_associative_bitwise(seed, L, n_shards):
+    """One fold call == any contiguous grouping across calls, bitwise —
+    state AND history. The rejoin path's correctness condition."""
+    side_info = bool(seed % 2)
+    cost, shards = _random_shards(seed, L, n_shards, side_info)
+    ref = _fold(cost, side_info, [shards])
+    got = _fold(cost, side_info, _grouping(shards, seed + 1))
+    _assert_states_bitwise(ref, got)
+    assert ref.history == got.history
+
+
+@given(st.integers(0, 10**6), st.integers(2, 6), st.integers(1, 6))
+@settings(max_examples=15, deadline=None)
+def test_merge_cross_host_equals_flat_merge(seed, L, n_shards):
+    """Nesting shards under hosts changes nothing: `merge_cross_host`
+    over any host-grouping == one flat `merge_shard_updates`, bitwise."""
+    side_info = bool(seed % 2)
+    cost, shards = _random_shards(seed, L, n_shards, side_info)
+    ref = _fold(cost, side_info, [shards])
+    got = SplitEEController(cost, side_info=side_info)
+    exited = got.merge_cross_host(_grouping(shards, seed + 2))
+    _assert_states_bitwise(ref, got)
+    assert ref.history == got.history
+    assert exited.shape == (sum(len(s.arms) for s in shards),)
+
+
+@given(st.integers(0, 10**6), st.integers(2, 6), st.integers(2, 6))
+@settings(max_examples=15, deadline=None)
+def test_merge_is_order_invariant(seed, L, n_shards):
+    """Permuting shard order: pull counts and the round counter are
+    EXACTLY invariant; mean rewards agree to float tolerance; the
+    history is the same multiset of per-sample rows."""
+    side_info = bool(seed % 2)
+    cost, shards = _random_shards(seed, L, n_shards, side_info)
+    perm = np.random.default_rng(seed + 3).permutation(n_shards)
+    a = _fold(cost, side_info, [shards])
+    b = _fold(cost, side_info, [[shards[i] for i in perm]])
+    np.testing.assert_array_equal(np.asarray(a.state.n),
+                                  np.asarray(b.state.n))
+    assert int(a.state.t) == int(b.state.t)
+    # q is float32 state: permuting the fold order reorders float32
+    # incremental-mean updates, so agreement is to f32 round-off
+    np.testing.assert_allclose(np.asarray(a.state.q),
+                               np.asarray(b.state.q),
+                               rtol=1e-5, atol=1e-6)
+    rows_a = sorted(zip(*(a.history[k] for k in sorted(a.history))))
+    rows_b = sorted(zip(*(b.history[k] for k in sorted(b.history))))
+    assert rows_a == rows_b
+
+
+def test_merge_empty_is_identity():
+    """Folding nothing changes nothing — the degenerate round where
+    every shard was lost with its host."""
+    cost = CostModel(num_layers=4, alpha=0.7, offload=2.0)
+    ctl = SplitEEController(cost)
+    ctl.update_batch([1, 2], [np.asarray([0.9]), np.asarray([0.3])],
+                     [None, 0.8], [0, 4096])
+    q0 = np.asarray(ctl.state.q).copy()
+    n0 = np.asarray(ctl.state.n).copy()
+    t0 = int(ctl.state.t)
+    exited = ctl.merge_shard_updates([])
+    assert exited.shape == (0,)
+    np.testing.assert_array_equal(np.asarray(ctl.state.q), q0)
+    np.testing.assert_array_equal(np.asarray(ctl.state.n), n0)
+    assert int(ctl.state.t) == t0
+
+
+def test_snapshot_restore_roundtrip_bitwise():
+    """snapshot/restore is exact: a restored controller evolves
+    bit-identically to the donor under the same subsequent folds."""
+    from repro.core import state_from_bytes, state_to_bytes
+    cost = CostModel(num_layers=3, alpha=0.6, offload=3.0)
+    _, shards = _random_shards(11, 3, 4, False)
+    donor = SplitEEController(cost)
+    donor.merge_shard_updates(shards[:2])
+    clone = SplitEEController(cost)
+    clone.restore(state_from_bytes(state_to_bytes(donor.state)))
+    _assert_states_bitwise(donor, clone)
+    donor.merge_shard_updates(shards[2:])
+    clone.merge_shard_updates(shards[2:])
+    _assert_states_bitwise(donor, clone)
+    # dtype preservation is part of "exact"
+    assert (np.asarray(donor.state.q).dtype
+            == np.asarray(clone.state.q).dtype)

@@ -1,0 +1,752 @@
+"""Fault-injection tests for the fault-tolerant distributed serving stack.
+
+Three layers, matching the architecture:
+
+* **exchange protocol** (in-process, threads over a FileKV — no model,
+  no jax compute): heartbeat-bounded gathers, GC, fencing on dropped
+  writes, freeze-vs-slow discrimination, arbiter failover, and the
+  rejoin handshake;
+* **serving runtime** (subprocess FileKV clusters): THE acceptance
+  invariant — a 3-process run with one worker killed at a mid-stream
+  epoch completes without stalling and its post-failure controller
+  evolution is bit-identical to a 2-process run seeded from the merged
+  state at the failure epoch — plus supervisor respawn + rejoin, a real
+  SIGKILL (slow marker), and the SIGSTOP liveness-watchdog test;
+* **CoordinatorExchange edge cases** (real jax.distributed clusters):
+  epoch-key GC, barrier'd close with a missing participant, concurrent
+  writers in distinct epoch namespaces.
+
+Fault injection is deterministic and env-driven (serving/faults.py), so
+every failure here happens at exactly the same serving round every run.
+CI runs this file in its own pytest invocation: subprocess clusters and
+signals are flaky bedfellows with ``-x``.
+"""
+import base64
+import dataclasses
+import glob
+import io
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving import (FAULT_KILL_EXIT, FencedHostError, FileKV,
+                           ResilientExchange, run_distributed_subprocesses,
+                           run_supervised_cluster)
+from repro.serving.faults import FaultInjector, parse_fault_plan
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SRC = os.path.join(_REPO, "src")
+
+
+# ============================================================ exchange
+# In-process protocol tests: N exchange instances over one FileKV,
+# driven by threads. "Death" is a host that stops gathering and stops
+# heartbeating — indistinguishable from a crash, from the cluster's
+# point of view.
+
+def _mk_exchange(kv, host, n, **kw):
+    kw.setdefault("heartbeat_timeout", 1.0)
+    kw.setdefault("heartbeat_interval", 0.1)
+    kw.setdefault("poll_interval", 0.02)
+    kw.setdefault("verdict_timeout", 30.0)
+    return ResilientExchange(kv, host_id=host, num_hosts=n, epoch=0, **kw)
+
+
+def _run_hosts(fns):
+    """Run one callable per host concurrently; re-raise any failure."""
+    errs = [None] * len(fns)
+
+    def wrap(i):
+        try:
+            fns[i]()
+        except BaseException as e:     # noqa: BLE001 — surfaced below
+            errs[i] = e
+
+    threads = [threading.Thread(target=wrap, args=(i,), daemon=True)
+               for i in range(len(fns))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(60)
+        assert not t.is_alive(), "host thread wedged"
+    return errs
+
+
+def test_resilient_gather_roundtrip_and_gc(tmp_path):
+    """Payloads round-trip in host order; round keys are GC'd one round
+    behind; close() removes the final round's keys."""
+    kv = FileKV(str(tmp_path))
+    exs = [_mk_exchange(kv, h, 2) for h in range(2)]
+    got = {}
+
+    def host(h):
+        def run():
+            for r in range(3):
+                res = exs[h].gather(f"p{r}-{h}".encode())
+                got[(h, r)] = (res.payloads, res.fold, res.members)
+            exs[h].close()
+        return run
+
+    errs = _run_hosts([host(0), host(1)])
+    assert errs == [None, None]
+    for h in range(2):
+        for r in range(3):
+            payloads, fold, members = got[(h, r)]
+            assert payloads == [f"p{r}-0".encode(), f"p{r}-1".encode()]
+            assert fold == [0, 1] and members == [0, 1]
+    # GC: no round payload keys survive close (hb keys die with it too)
+    leftover = [p for p in glob.glob(str(tmp_path) + "/**", recursive=True)
+                if os.path.isfile(p) and "/round/" in p]
+    assert leftover == [], leftover
+
+
+def test_drop_kv_write_fences_host(tmp_path):
+    """A host whose round payload never reaches the store is declared
+    dead by the arbiter and fences itself when it reads the verdict;
+    the survivor re-slices and finishes."""
+    kv = FileKV(str(tmp_path))
+    inj = FaultInjector(parse_fault_plan("drop_kv:host=1,epoch=1"), 1)
+    ex0 = _mk_exchange(kv, 0, 2)
+    ex1 = _mk_exchange(kv, 1, 2, injector=inj)
+    res0 = []
+
+    def host0():
+        for r in range(3):
+            res0.append(ex0.gather(b"a%d" % r))
+        ex0.close()
+
+    def host1():
+        ex1.gather(b"b0")
+        with pytest.raises(FencedHostError):
+            ex1.gather(b"b1")
+        ex1.close()
+
+    errs = _run_hosts([host0, host1])
+    assert errs == [None, None]
+    assert res0[0].fold == [0, 1]
+    assert res0[1].fold == [0] and res0[1].removed == [1]
+    assert res0[2].fold == [0] and res0[2].members == [0]
+    assert ex0.reconfigurations[0]["round"] == 1
+    assert ex0.reconfigurations[0]["removed"] == [1]
+    # detection bounded by the heartbeat timeout (plus poll slack)
+    assert ex0.reconfigurations[0]["detect_s"] < 1.0 + 2.0
+
+
+def test_freeze_is_removed_but_slow_is_not(tmp_path):
+    """The slow-vs-dead discrimination: a frozen host (heartbeat paused
+    past the timeout) is removed; a merely slow host (heartbeat alive)
+    is waited for and folds normally."""
+    kv = FileKV(str(tmp_path))
+    frozen = FaultInjector(parse_fault_plan("freeze:host=1,epoch=1,secs=3.0"),
+                           1)
+    ex0 = _mk_exchange(kv, 0, 2)
+    ex1 = _mk_exchange(kv, 1, 2, injector=frozen)
+    res0 = []
+
+    def host0():
+        for r in range(2):
+            res0.append(ex0.gather(b"a%d" % r))
+        ex0.close()
+
+    def host1():
+        ex1.gather(b"b0")
+        with pytest.raises(FencedHostError):
+            ex1.gather(b"b1")     # wakes from the freeze already fenced
+        ex1.close()
+
+    assert _run_hosts([host0, host1]) == [None, None]
+    assert res0[1].removed == [1]
+
+    # slow variant: 1.5s stall but heartbeats keep flowing -> no removal
+    kv2 = FileKV(str(tmp_path) + "-slow")
+    slow = FaultInjector(parse_fault_plan("sleep:host=1,epoch=1,secs=1.5"), 1)
+    ey0 = _mk_exchange(kv2, 0, 2)
+    ey1 = _mk_exchange(kv2, 1, 2, injector=slow)
+    out = []
+
+    def s0():
+        for r in range(2):
+            out.append(ey0.gather(b"a%d" % r))
+        ey0.close()
+
+    def s1():
+        for r in range(2):
+            ey1.gather(b"b%d" % r)
+        ey1.close()
+
+    assert _run_hosts([s0, s1]) == [None, None]
+    assert out[1].fold == [0, 1] and out[1].removed == []
+    assert ey0.reconfigurations == []
+
+
+def test_arbiter_failover(tmp_path):
+    """If the arbiter itself dies, the next-ranked live host observes
+    its stale heartbeat, decides the round, and publishes the verdict —
+    first write wins, the cluster keeps moving."""
+    kv = FileKV(str(tmp_path))
+    exs = [_mk_exchange(kv, h, 3) for h in range(3)]
+    res = {1: [], 2: []}
+
+    def host0():
+        exs[0].gather(b"a0")
+        exs[0].pause_heartbeat()       # dies after round 0
+
+    def survivor(h):
+        def run():
+            for r in range(3):
+                res[h].append(exs[h].gather(b"p%d-%d" % (r, h)))
+            exs[h].close()
+        return run
+
+    assert _run_hosts([host0, survivor(1), survivor(2)]) == [None] * 3
+    for h in (1, 2):
+        assert res[h][0].fold == [0, 1, 2]
+        assert res[h][1].removed == [0]
+        assert res[h][1].fold == [1, 2]
+        assert res[h][2].members == [1, 2]
+    assert exs[1].reconfigurations == exs[2].reconfigurations
+
+
+def test_rejoin_handshake(tmp_path):
+    """A respawned host requests admission, the arbiter acks after the
+    fold of its admission round with the state blob + stream position,
+    and the joiner gathers from its first active round on."""
+    kv = FileKV(str(tmp_path))
+    ex0 = _mk_exchange(kv, 0, 2)
+    ex1 = _mk_exchange(kv, 1, 2)
+    new1 = ResilientExchange(kv, host_id=1, num_hosts=2, rejoin=True,
+                             heartbeat_timeout=1.0, heartbeat_interval=0.1,
+                             poll_interval=0.02)
+    res0, ack_box, resj = [], [], []
+    # request_rejoin decodes the ack's state blob with state_from_bytes,
+    # so the fold hook must ship a real snapshot
+    from repro.core import CostModel, SplitEEController, state_to_bytes
+    ctl = SplitEEController(CostModel(num_layers=3, alpha=0.6, offload=2.0))
+    blob = state_to_bytes(ctl.state)
+
+    def host0():
+        for r in range(6):
+            res0.append(ex0.gather(b"a%d" % r))
+            ex0.post_fold(blob, selected=(r + 1) * 8)
+        ex0.close()
+
+    def host1():
+        ex1.gather(b"b0")
+        ex1.pause_heartbeat()          # dies after round 0
+
+    def joiner():
+        time.sleep(0.5)
+        ack = new1.request_rejoin(timeout_s=30.0)
+        ack_box.append(ack)
+        for r in range(ack.first_round, 6):
+            resj.append(new1.gather(b"j%d" % r))
+            new1.post_fold(blob, selected=(r + 1) * 8)
+        new1.close()
+
+    assert _run_hosts([host0, host1, joiner]) == [None] * 3
+    ack = ack_box[0]
+    jr = ack.first_round
+    assert 1 <= jr <= 5
+    assert ack.selected == jr * 8          # stream position at admission
+    assert ack.members == [0, 1]
+    # joiner folds the same payload sets as the survivor from jr on
+    for r, resj_r in zip(range(jr, 6), resj):
+        assert resj_r.fold == [0, 1]
+        assert resj_r.payloads == res0[r].payloads
+    # survivor saw the full removal + rejoin story
+    removed = [c for c in ex0.reconfigurations if c["removed"] == [1]]
+    joined = [c for c in ex0.reconfigurations if c["joined"] == [1]]
+    assert removed and joined
+    assert ex0.members == [0, 1]
+
+
+# ====================================================== serving cluster
+# Subprocess FileKV clusters: no jax.distributed bootstrap, so any
+# worker (including host 0) can die without taking the transport along.
+
+_FT_WORKER = """
+import base64, dataclasses, io, itertools, json, os
+import numpy as np
+from repro.serving import ft_serving_context
+exchange, init_state, skip = ft_serving_context(
+    heartbeat_timeout=float(os.environ.get("TEST_HB_TIMEOUT", "3.0")))
+import jax
+from repro.configs import get_smoke_config
+from repro.core import CostModel, state_from_bytes
+from repro.data import OnlineStream, make_dataset
+from repro.data.synthetic import VOCAB
+from repro.models.api import build_model
+from repro.serving import EdgeCloudRuntime, serve_stream_distributed
+
+sb64 = os.environ.get("TEST_INIT_STATE_B64")
+if sb64:
+    init_state = state_from_bytes(base64.b64decode(sb64))
+    skip = int(os.environ["TEST_SKIP"])
+batch = int(os.environ.get("TEST_BATCH", "12"))
+max_samples = int(os.environ.get("TEST_MAX_SAMPLES", "96")) - skip
+
+base = get_smoke_config("elasticbert12")
+cfg = dataclasses.replace(
+    base, num_layers=3, d_model=32, num_heads=2, num_kv_heads=2,
+    d_ff=128, vocab_size=VOCAB, num_classes=2, dtype="float32")
+params = build_model(cfg).init(jax.random.PRNGKey(0))
+eval_data = make_dataset("imdb_like", int(os.environ.get("TEST_DATA_N",
+                                                         "512")),
+                         seed=2, seq_len=16)
+rt = EdgeCloudRuntime(cfg)
+cost = CostModel(num_layers=cfg.num_layers, alpha=0.6, offload=3.0)
+stream = iter(OnlineStream(eval_data, seed=0))
+if skip:
+    stream = itertools.islice(stream, skip, None)
+out = serve_stream_distributed(
+    rt, params, stream, cost, batch_size=batch, max_samples=max_samples,
+    replicas=1, overlap=False, exchange=exchange, init_state=init_state,
+    stream_offset=skip, record_states=True)
+
+def snap_b64(s):
+    buf = io.BytesIO()
+    np.savez(buf, q=s["q"], n=s["n"], t=np.asarray(s["t"], np.int64))
+    return base64.b64encode(buf.getvalue()).decode()
+
+print("RESULT " + json.dumps({
+    "host": out["distributed"]["host_id"], "n": out["n"], "skip": skip,
+    "preds": out["preds"].tolist(), "arms": out["arms"].tolist(),
+    "rewards": out["rewards"].tolist(), "exited": out["exited"].tolist(),
+    "q": out["state"]["q"].tolist(), "n_state": out["state"]["n"].tolist(),
+    "t": out["state"]["t"], "lost": out["distributed"]["lost_samples"],
+    "reconf": out["distributed"]["reconfigurations"],
+    "members_final": out["distributed"]["members_final"],
+    "states": [snap_b64(s) for s in out["states"]]}))
+"""
+
+
+def _cluster_env(kv_dir, **extra):
+    env = {"PYTHONPATH": _SRC + os.pathsep + os.environ.get("PYTHONPATH", ""),
+           "SPLITEE_KV_DIR": kv_dir}
+    env.update({k: str(v) for k, v in extra.items()})
+    return env
+
+
+def _parse_results(completed, skip_slots=()):
+    res = {}
+    for i, p in enumerate(completed):
+        if i in skip_slots:
+            continue
+        assert p.returncode == 0, (i, p.returncode, p.stderr[-4000:])
+        lines = [ln for ln in p.stdout.splitlines()
+                 if ln.startswith("RESULT ")]
+        assert lines, (i, p.stdout[-2000:])
+        res[i] = json.loads(lines[0][len("RESULT "):])
+    return res
+
+
+def _unsnap(b64):
+    z = np.load(io.BytesIO(base64.b64decode(b64)))
+    return z["q"], z["n"], int(z["t"])
+
+
+def test_killed_worker_invariant_3_to_2(tmp_path):
+    """THE acceptance invariant. Run A: 3 hosts, host 1 killed at epoch
+    3 (fault injection) — completes without stalling, detection within
+    the heartbeat timeout, only the failure epoch's slice lost. Run B:
+    2 hosts seeded with run A's merged state at epoch 3, serving the
+    remaining stream. From epoch 4 onward, run A's controller evolution
+    (state snapshots, history, predictions) is bit-identical to run B:
+    failure changes who computes, never what the policy learns."""
+    hb_timeout = 3.0
+    env_a = _cluster_env(str(tmp_path / "kv-a"),
+                         SPLITEE_FAULTS="kill:host=1,epoch=3",
+                         TEST_MAX_SAMPLES=96, TEST_HB_TIMEOUT=hb_timeout)
+    t0 = time.monotonic()
+    rep = run_supervised_cluster(_FT_WORKER, 3, env=env_a,
+                                 coordinator=False, fail_fast=False,
+                                 timeout=240)
+    wall = time.monotonic() - t0
+    assert rep.completed[1].returncode == FAULT_KILL_EXIT
+    res = _parse_results(rep.completed, skip_slots={1})
+    a0, a2 = res[0], res[2]
+
+    # no stall: the survivors finished in bounded time, and detection
+    # itself took at most the heartbeat timeout (plus poll slack)
+    assert wall < 180, wall
+    assert len(a0["reconf"]) == 1
+    assert a0["reconf"][0]["round"] == 3
+    assert a0["reconf"][0]["removed"] == [1]
+    assert a0["reconf"][0]["detect_s"] < hb_timeout + 2.0
+    # survivors' mirrors identical; only epoch 3's host-1 slice lost
+    assert a0["q"] == a2["q"] and a0["n_state"] == a2["n_state"]
+    assert a0["t"] == a2["t"] and a0["preds"] == a2["preds"]
+    assert a0["states"] == a2["states"]
+    assert a0["lost"] == 4                       # 12 over 3 hosts
+    assert a0["members_final"] == [0, 2]
+    assert a0["preds"][40:44] == [-1, -1, -1, -1]   # host 1's rows of e=3
+
+    # run B: 2 hosts from the merged state at e=3, stream advanced past
+    # the 4 folded batches
+    env_b = _cluster_env(str(tmp_path / "kv-b"), TEST_MAX_SAMPLES=96,
+                         TEST_INIT_STATE_B64=a0["states"][3], TEST_SKIP=48,
+                         TEST_HB_TIMEOUT=hb_timeout)
+    rep_b = run_supervised_cluster(_FT_WORKER, 2, env=env_b,
+                                   coordinator=False, timeout=240)
+    b0 = _parse_results(rep_b.completed)[0]
+
+    # bit-identical controller evolution from epoch 4 on
+    for r in range(4):
+        qa, na, ta = _unsnap(a0["states"][4 + r])
+        qb, nb, tb = _unsnap(b0["states"][r])
+        np.testing.assert_array_equal(qa, qb)
+        np.testing.assert_array_equal(na, nb)
+        assert ta == tb
+    assert a0["preds"][48:] == b0["preds"]
+    assert a0["arms"][-48:] == b0["arms"]
+    assert a0["rewards"][-48:] == b0["rewards"]
+    assert a0["exited"][-48:] == b0["exited"]
+    assert a0["q"] == b0["q"] and a0["n_state"] == b0["n_state"]
+    assert a0["t"] == b0["t"]
+
+
+def test_respawned_worker_rejoins(tmp_path):
+    """Supervisor mode end to end: the killed worker is respawned with
+    the rejoin flag, downloads the merged state + stream position from
+    the KV store, re-enters at an epoch boundary, and finishes with a
+    controller mirror bit-identical to the survivors'."""
+    env = _cluster_env(
+        str(tmp_path / "kv"),
+        SPLITEE_FAULTS="kill:host=1,epoch=3;sleep:host=*,epoch=*,secs=0.8",
+        TEST_MAX_SAMPLES=144)
+    rep = run_supervised_cluster(_FT_WORKER, 3, env=env, coordinator=False,
+                                 fail_fast=False, respawn=True,
+                                 max_respawns=1, timeout=300)
+    assert rep.respawns[1] == 1
+    kinds = [(i.kind, i.slot) for i in rep.incidents]
+    assert ("exit", 1) in kinds and ("respawn", 1) in kinds
+    res = _parse_results(rep.completed)
+    a0, a1, a2 = res[0], res[1], res[2]
+    # all three mirrors agree bitwise at the end
+    assert a0["q"] == a1["q"] == a2["q"]
+    assert a0["n_state"] == a1["n_state"] == a2["n_state"]
+    assert a0["t"] == a1["t"] == a2["t"]
+    # the joiner actually served a tail of the stream, from the global
+    # position the ack told it to resume at
+    assert a1["skip"] > 0 and a1["n"] > 0
+    assert a1["skip"] + a1["n"] == 144
+    assert a0["preds"][a1["skip"]:] == a1["preds"]
+    # survivors recorded the removal and the (re)join; cluster healed
+    assert any(c["removed"] == [1] for c in a0["reconf"])
+    assert any(c["joined"] == [1] for c in a0["reconf"])
+    assert a0["members_final"] == [0, 1, 2]
+    # only the failure epoch's slice was lost
+    assert a0["lost"] == 4
+
+
+@pytest.mark.slow
+def test_real_sigkill_mid_stream(tmp_path):
+    """Same story under a real SIGKILL delivered from outside, timed off
+    the worker's KV writes rather than injected at a round boundary."""
+    kv_dir = str(tmp_path / "kv")
+    env = dict(os.environ)
+    env.update(_cluster_env(
+        kv_dir, SPLITEE_FAULTS="sleep:host=*,epoch=*,secs=0.3",
+        TEST_MAX_SAMPLES=96))
+    env["SPLITEE_NUM_PROCESSES"] = "3"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=1"
+    procs = []
+    for slot in range(3):
+        penv = dict(env)
+        penv["SPLITEE_PROCESS_ID"] = str(slot)
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", _FT_WORKER], env=penv,
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True))
+    # kill worker 1 once its round-2 payload lands in the store
+    deadline = time.monotonic() + 120
+    pat = os.path.join(kv_dir, "splitee", "ft", "*", "round", "2", "1")
+    while not glob.glob(pat):
+        assert time.monotonic() < deadline, "round-2 payload never appeared"
+        assert procs[1].poll() is None
+        time.sleep(0.05)
+    os.kill(procs[1].pid, signal.SIGKILL)
+    outs = {}
+    for i, p in enumerate(procs):
+        try:
+            stdout, stderr = p.communicate(timeout=180)
+        except subprocess.TimeoutExpired:
+            for q in procs:
+                if q.poll() is None:
+                    q.kill()
+            raise AssertionError(f"worker {i} stalled after SIGKILL")
+        outs[i] = (p.returncode, stdout, stderr)
+    assert outs[1][0] == -signal.SIGKILL
+    res = {}
+    for i in (0, 2):
+        rc, stdout, stderr = outs[i]
+        assert rc == 0, (i, rc, stderr[-4000:])
+        line = [ln for ln in stdout.splitlines()
+                if ln.startswith("RESULT ")][0]
+        res[i] = json.loads(line[len("RESULT "):])
+    a0, a2 = res[0], res[2]
+    assert a0["q"] == a2["q"] and a0["t"] == a2["t"]
+    assert a0["states"] == a2["states"]
+    assert len(a0["reconf"]) == 1
+    assert a0["reconf"][0]["removed"] == [1]
+    # killed somewhere in rounds 2..5 depending on delivery timing
+    assert a0["reconf"][0]["round"] in (2, 3, 4, 5)
+    assert a0["lost"] == 4
+    assert a0["members_final"] == [0, 2]
+
+
+def test_sigstop_watchdog(tmp_path):
+    """Satellite: exit-based fail-fast never fires for a worker that
+    refuses to die. A SIGSTOP'd worker freezes its heartbeat file; the
+    supervisor's liveness watchdog kills it within the watchdog timeout
+    instead of blocking until the cluster timeout."""
+    worker = """
+import os, signal, time
+from repro.serving import start_worker_heartbeat
+start_worker_heartbeat(0.2)
+if os.environ["SPLITEE_PROCESS_ID"] == "1":
+    time.sleep(2.0)
+    os.kill(os.getpid(), signal.SIGSTOP)
+time.sleep(120)
+print("NEVER")
+"""
+    env = {"PYTHONPATH": _SRC + os.pathsep +
+           os.environ.get("PYTHONPATH", "")}
+    t0 = time.monotonic()
+    rep = run_supervised_cluster(worker, 2, env=env, coordinator=False,
+                                 fail_fast=True, watchdog_timeout=3.0,
+                                 startup_grace=60.0, timeout=110)
+    wall = time.monotonic() - t0
+    assert wall < 90, wall                      # no 120s worker sleep-out
+    hung = [i for i in rep.incidents if i.kind == "hung"]
+    assert [i.slot for i in hung] == [1]
+    assert rep.completed[1].returncode == -signal.SIGKILL
+    # healthy worker was torn down by fail-fast, not left running
+    assert rep.completed[0].returncode != 0
+
+
+# ================================== fault-tolerant runtime differentials
+
+def _testbed(num_layers=3, d_model=32, seed=0):
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.data.synthetic import VOCAB
+    from repro.models.api import build_model
+    base = get_smoke_config("elasticbert12")
+    cfg = dataclasses.replace(
+        base, num_layers=num_layers, d_model=d_model, num_heads=2,
+        num_kv_heads=2, d_ff=128, vocab_size=VOCAB, num_classes=2,
+        dtype="float32")
+    params = build_model(cfg).init(jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def sharded_ref():
+    """Single-process sharded reference for the FT differentials."""
+    from repro.core import CostModel
+    from repro.data import OnlineStream, make_dataset
+    from repro.serving import EdgeCloudRuntime, serve_stream_sharded
+    cfg, params = _testbed()
+    eval_data = make_dataset("imdb_like", 128, seed=2, seq_len=16)
+    rt = EdgeCloudRuntime(cfg)
+    cost = CostModel(num_layers=cfg.num_layers, alpha=0.6, offload=3.0)
+    out = serve_stream_sharded(
+        rt, params, OnlineStream(eval_data, seed=0), cost,
+        batch_size=16, max_samples=96, replicas=1, overlap=False)
+    return out
+
+
+def test_ft_single_host_bit_identical_to_sharded(sharded_ref, tmp_path):
+    """The fault-tolerance machinery is policy-neutral: a 1-host
+    fault-tolerant run (FileKV exchange, verdicts every round) is
+    bit-identical to the sharded reference."""
+    from repro.core import CostModel
+    from repro.data import OnlineStream, make_dataset
+    from repro.serving import EdgeCloudRuntime, serve_stream_distributed
+    cfg, params = _testbed()
+    eval_data = make_dataset("imdb_like", 128, seed=2, seq_len=16)
+    rt = EdgeCloudRuntime(cfg)
+    cost = CostModel(num_layers=cfg.num_layers, alpha=0.6, offload=3.0)
+    ex = ResilientExchange(FileKV(str(tmp_path)), host_id=0, num_hosts=1,
+                           heartbeat_timeout=2.0)
+    got = serve_stream_distributed(
+        rt, params, OnlineStream(eval_data, seed=0), cost,
+        batch_size=16, max_samples=96, replicas=1, overlap=False,
+        exchange=ex)
+    ref = sharded_ref
+    np.testing.assert_array_equal(got["arms"], ref["arms"])
+    np.testing.assert_array_equal(got["preds"], ref["preds"])
+    np.testing.assert_array_equal(got["rewards"], ref["rewards"])
+    np.testing.assert_array_equal(got["state"]["q"], ref["state"]["q"])
+    np.testing.assert_array_equal(got["state"]["n"], ref["state"]["n"])
+    assert got["state"]["t"] == ref["state"]["t"]
+    assert got["distributed"]["fault_tolerant"] is True
+    assert got["distributed"]["lost_samples"] == 0
+    assert got["distributed"]["reconfigurations"] == []
+
+
+_COORD_FT_WORKER = """
+import dataclasses, json
+from repro.serving import init_distributed_from_env
+init_distributed_from_env()
+import jax
+from repro.configs import get_smoke_config
+from repro.core import CostModel
+from repro.data import OnlineStream, make_dataset
+from repro.data.synthetic import VOCAB
+from repro.models.api import build_model
+from repro.serving import EdgeCloudRuntime, serve_stream_distributed
+
+base = get_smoke_config("elasticbert12")
+cfg = dataclasses.replace(
+    base, num_layers=3, d_model=32, num_heads=2, num_kv_heads=2,
+    d_ff=128, vocab_size=VOCAB, num_classes=2, dtype="float32")
+params = build_model(cfg).init(jax.random.PRNGKey(0))
+eval_data = make_dataset("imdb_like", 128, seed=2, seq_len=16)
+rt = EdgeCloudRuntime(cfg)
+cost = CostModel(num_layers=cfg.num_layers, alpha=0.6, offload=3.0)
+out = serve_stream_distributed(
+    rt, params, OnlineStream(eval_data, seed=0), cost,
+    batch_size=16, max_samples=96, overlap=False,
+    fault_tolerant=True, heartbeat_timeout=4.0)
+print("RESULT " + json.dumps({
+    "host": out["distributed"]["host_id"],
+    "preds": out["preds"].tolist(), "arms": out["arms"].tolist(),
+    "q": out["state"]["q"].tolist(), "n": out["state"]["n"].tolist(),
+    "t": out["state"]["t"], "lost": out["distributed"]["lost_samples"],
+    "reconf": out["distributed"]["reconfigurations"]}))
+"""
+
+
+def test_ft_two_process_coordinator_kv_matches_sharded(sharded_ref):
+    """Fault-tolerant serving over the real jax.distributed coordinator
+    transport (heartbeats, verdicts and all) stays bit-identical to the
+    single-process sharded reference when nothing fails."""
+    env = {"PYTHONPATH": _SRC + os.pathsep +
+           os.environ.get("PYTHONPATH", "")}
+    procs = run_distributed_subprocesses(_COORD_FT_WORKER, 2, env=env,
+                                         cwd=_REPO, timeout=300)
+    ref = sharded_ref
+    for i, p in enumerate(procs):
+        assert p.returncode == 0, (i, p.returncode, p.stderr[-4000:])
+        line = [ln for ln in p.stdout.splitlines()
+                if ln.startswith("RESULT ")][0]
+        r = json.loads(line[len("RESULT "):])
+        np.testing.assert_array_equal(r["preds"], ref["preds"])
+        np.testing.assert_array_equal(r["arms"], ref["arms"])
+        np.testing.assert_array_equal(r["q"], ref["state"]["q"])
+        np.testing.assert_array_equal(r["n"], ref["state"]["n"])
+        assert r["t"] == ref["state"]["t"]
+        assert r["lost"] == 0 and r["reconf"] == []
+
+
+# ================================= CoordinatorExchange edge cases
+# (previously untested lockstep-exchange behaviors, on real clusters)
+
+_GC_WORKER = """
+from repro.serving import init_distributed_from_env
+init_distributed_from_env()
+import jax
+from repro.serving.distributed import CoordinatorExchange
+from repro.serving.kvstore import CoordinatorKV
+
+h = jax.process_index()
+ex = CoordinatorExchange(timeout_ms=30000)
+kv = CoordinatorKV(probe_timeout_ms=200)
+for r in range(3):
+    out = ex.allgather_bytes(b"p%d-%d" % (r, h))
+    assert out == [b"p%d-0" % r, b"p%d-1" % r], out
+    assert kv.try_get("%s/%d/%d" % (ex._prefix, r, h)) is not None
+    if r > 0:
+        # own previous-round key was GC'd during this gather
+        assert kv.try_get("%s/%d/%d" % (ex._prefix, r - 1, h)) is None
+ex.close()
+assert kv.try_get("%s/2/%d" % (ex._prefix, h)) is None
+print("GC_OK")
+"""
+
+
+def test_coordinator_exchange_epoch_gc():
+    """Epoch-key GC really deletes the one-round-behind keys, and the
+    barrier'd close removes the final round's."""
+    env = {"PYTHONPATH": _SRC + os.pathsep +
+           os.environ.get("PYTHONPATH", "")}
+    procs = run_distributed_subprocesses(_GC_WORKER, 2, env=env,
+                                         timeout=180)
+    for i, p in enumerate(procs):
+        assert p.returncode == 0, (i, p.returncode, p.stderr[-3000:])
+        assert "GC_OK" in p.stdout
+
+
+_BARRIER_WORKER = """
+import time
+from repro.serving import init_distributed_from_env
+init_distributed_from_env()
+import jax
+from repro.serving.distributed import CoordinatorExchange
+ex = CoordinatorExchange(timeout_ms=5000)
+ex.allgather_bytes(b"x%d" % jax.process_index())
+if jax.process_index() == 1:
+    print("W1_SKIPS_CLOSE")       # exits without ever calling close()
+else:
+    t0 = time.time()
+    try:
+        ex.close()
+        print("CLOSE_RETURNED")   # must not happen
+    except Exception:
+        print("CLOSE_TIMEOUT_OK %.1f" % (time.time() - t0))
+"""
+
+
+def test_coordinator_close_barrier_times_out_cleanly():
+    """close() is barrier'd; with a participant missing it must raise
+    within the exchange timeout instead of wedging the survivor."""
+    env = {"PYTHONPATH": _SRC + os.pathsep +
+           os.environ.get("PYTHONPATH", "")}
+    t0 = time.monotonic()
+    procs = run_distributed_subprocesses(_BARRIER_WORKER, 2, env=env,
+                                         timeout=120)
+    assert time.monotonic() - t0 < 100
+    assert procs[0].returncode == 0, procs[0].stderr[-3000:]
+    assert "CLOSE_TIMEOUT_OK" in procs[0].stdout, procs[0].stdout
+    assert "CLOSE_RETURNED" not in procs[0].stdout
+
+
+_NS_WORKER = """
+from repro.serving import init_distributed_from_env
+init_distributed_from_env()
+import jax
+from repro.serving.distributed import CoordinatorExchange
+h = jax.process_index()
+ex_a = CoordinatorExchange(timeout_ms=30000)
+ex_b = CoordinatorExchange(timeout_ms=30000)
+assert ex_a._prefix != ex_b._prefix
+for r in range(3):
+    ga = ex_a.allgather_bytes(b"a%d-%d" % (r, h))
+    gb = ex_b.allgather_bytes(b"b%d-%d" % (r, h))
+    assert ga == [b"a%d-0" % r, b"a%d-1" % r], ga
+    assert gb == [b"b%d-0" % r, b"b%d-1" % r], gb
+ex_b.close()
+ex_a.close()
+print("NS_OK")
+"""
+
+
+def test_coordinator_distinct_epoch_namespaces():
+    """Two live exchanges per process (back-to-back serving passes)
+    interleave rounds without key collisions — the epoch namespace
+    isolation the GC scheme depends on."""
+    env = {"PYTHONPATH": _SRC + os.pathsep +
+           os.environ.get("PYTHONPATH", "")}
+    procs = run_distributed_subprocesses(_NS_WORKER, 2, env=env,
+                                         timeout=180)
+    for i, p in enumerate(procs):
+        assert p.returncode == 0, (i, p.returncode, p.stderr[-3000:])
+        assert "NS_OK" in p.stdout
