@@ -35,7 +35,7 @@ init_distributed_from_env()
 import jax
 from repro.core import CostModel
 from repro.data import OnlineStream, make_dataset
-from repro.serving import EdgeCloudRuntime, serve_stream_distributed
+from repro.serving import EdgeCloudRuntime, ServingConfig, serve
 from serve_throughput import SEQ_LEN, build
 
 cfg, params = build({layers}, {steps})
@@ -43,12 +43,12 @@ rt = EdgeCloudRuntime(cfg)
 eval_data = make_dataset("imdb_like", max(2 * {samples}, 1024), seed=2,
                          seq_len=SEQ_LEN)
 cost = CostModel(num_layers=cfg.num_layers, alpha=0.75, offload=3.0)
+scfg = ServingConfig(path="distributed", batch_size={batch_size},
+                     replicas=1, overlap={overlap},
+                     overlap_depth={overlap_depth}, max_samples={samples})
 
 def run():
-    return serve_stream_distributed(
-        rt, params, OnlineStream(eval_data, seed=0), cost,
-        batch_size={batch_size}, replicas=1, overlap={overlap},
-        overlap_depth={overlap_depth}, max_samples={samples})
+    return serve(rt, params, OnlineStream(eval_data, seed=0), cost, scfg)
 
 run()                                  # warmup: compile all bucket shapes
 t0 = time.time()

@@ -45,7 +45,7 @@ from repro.core import CostModel
 from repro.data import OnlineStream, make_dataset
 from repro.data.synthetic import VOCAB
 from repro.models.api import build_model
-from repro.serving import EdgeCloudRuntime, serve_stream_distributed
+from repro.serving import EdgeCloudRuntime, ServingConfig, serve
 
 base = get_smoke_config("elasticbert12")
 cfg = dataclasses.replace(
@@ -56,10 +56,12 @@ eval_data = make_dataset("imdb_like", max(2 * {samples}, 1024), seed=2,
                          seq_len=32)
 rt = EdgeCloudRuntime(cfg)
 cost = CostModel(num_layers=cfg.num_layers, alpha=0.75, offload=3.0)
-out = serve_stream_distributed(
-    rt, params, OnlineStream(eval_data, seed=0), cost,
-    batch_size={batch_size}, max_samples={samples}, replicas=1,
-    overlap=False, exchange=exchange, record_states=True)
+scfg = ServingConfig(path="distributed", fault_tolerant=True,
+                     batch_size={batch_size}, max_samples={samples},
+                     replicas=1, overlap=False, record_states=True,
+                     heartbeat_timeout={hb_timeout})
+out = serve(rt, params, OnlineStream(eval_data, seed=0), cost, scfg,
+            exchange=exchange)
 print("WORKER_RESULT " + json.dumps({{
     "host": out["distributed"]["host_id"], "n": out["n"],
     "lost": out["distributed"]["lost_samples"],

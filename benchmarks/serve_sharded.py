@@ -21,7 +21,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 
 # must land before jax initializes its backends
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
@@ -33,7 +32,7 @@ import jax  # noqa: E402
 from repro.core import CostModel  # noqa: E402
 from repro.data import OnlineStream, make_dataset  # noqa: E402
 from repro.serving import (  # noqa: E402
-    EdgeCloudRuntime, serve_stream_batched, serve_stream_sharded)
+    EdgeCloudRuntime, ServingConfig, serve)
 
 from serve_throughput import SEQ_LEN, build, timed  # noqa: E402
 
@@ -55,9 +54,9 @@ def run(samples: int = 1024, layers: int = 4, steps: int = 60,
     rows = []
 
     def run_batched():
-        return serve_stream_batched(rt, params, stream(), cost,
-                                    batch_size=batch_size,
-                                    max_samples=samples)
+        return serve(rt, params, stream(), cost,
+                     ServingConfig(path="batched", batch_size=batch_size,
+                                   max_samples=samples))
 
     out, dt = timed(run_batched, warmup_fn=run_batched)
     rows.append({"runtime": "batched", "replicas": 1, "overlap": False,
@@ -71,9 +70,11 @@ def run(samples: int = 1024, layers: int = 4, steps: int = 60,
             continue
         for overlap in (False, True):
             def run_sharded(r=r, overlap=overlap):
-                return serve_stream_sharded(
-                    rt, params, stream(), cost, batch_size=batch_size,
-                    replicas=r, overlap=overlap, max_samples=samples)
+                return serve(
+                    rt, params, stream(), cost,
+                    ServingConfig(path="sharded", batch_size=batch_size,
+                                  replicas=r, overlap=overlap,
+                                  max_samples=samples))
 
             out, dt = timed(run_sharded, warmup_fn=run_sharded)
             sps = out["n"] / dt

@@ -25,7 +25,7 @@ from repro.core import CostModel
 from repro.data import OnlineStream, make_dataset
 from repro.data.synthetic import VOCAB
 from repro.launch.train import train_classifier
-from repro.serving import EdgeCloudRuntime, serve_stream, serve_stream_batched
+from repro.serving import EdgeCloudRuntime, ServingConfig, serve
 
 BATCH_SIZES = [8, 32]
 
@@ -76,8 +76,9 @@ def run(samples: int = 512, layers: int = 4, steps: int = 60,
     rows = []
 
     def run_seq():
-        return serve_stream(rt, params, stream(), cost,
-                            side_info=side_info, max_samples=samples)
+        return serve(rt, params, stream(), cost,
+                     ServingConfig(path="sequential", side_info=side_info,
+                                   max_samples=samples))
 
     out, dt = timed(run_seq, warmup_fn=run_seq)
     base_sps = out["n"] / dt
@@ -85,9 +86,10 @@ def run(samples: int = 512, layers: int = 4, steps: int = 60,
 
     for b in BATCH_SIZES:
         def run_batched(b=b):
-            return serve_stream_batched(rt, params, stream(), cost,
-                                        side_info=side_info, batch_size=b,
-                                        max_samples=samples)
+            return serve(rt, params, stream(), cost,
+                         ServingConfig(path="batched", batch_size=b,
+                                       side_info=side_info,
+                                       max_samples=samples))
 
         out, dt = timed(run_batched, warmup_fn=run_batched)
         sps = out["n"] / dt

@@ -1,0 +1,102 @@
+"""Request-level serving with the `Engine` push-session API.
+
+The one-shot `serve()` facade replays a finite offline stream. Real
+deployments see *traffic*: requests arrive in bursts, and the server
+must keep serving between them. This demo drives the same SplitEE
+controller + offload-queue machinery through `Engine.submit/drain/close`:
+
+  1. train the multi-exit testbed and calibrate alpha (as in
+     examples/serve_splitee.py),
+  2. replay the evaluation stream as bursty arrivals (seeded random
+     burst sizes), pushing each burst into the engine — full
+     micro-batches are served as soon as they accumulate,
+  3. drain mid-session for a live report (throughput, exit mix),
+  4. close, and verify the session learned *exactly* what the one-shot
+     facade would have: bit-identical arms, predictions, and bandit
+     state on the same samples (the ladder invariant, pinned by
+     tests/test_serving_api.py).
+
+    PYTHONPATH=src python examples/serve_engine.py --samples 600
+"""
+import argparse
+import dataclasses
+import itertools
+
+import numpy as np
+
+from repro.core import CostModel, calibrate_alpha
+from repro.data import OnlineStream
+from repro.launch.serve import build_testbed
+from repro.serving import EdgeCloudRuntime, Engine, ServingConfig, serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=600)
+    ap.add_argument("--layers", type=int, default=6)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--offload", type=float, default=5.0)
+    ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--mean-burst", type=int, default=24,
+                    help="average number of requests per arrival burst")
+    args = ap.parse_args()
+
+    cfg, params, model, _, eval_data, (conf_val, correct_val), log = \
+        build_testbed(layers=args.layers, steps=args.steps)
+    print(f"testbed trained (final loss {log[-1]['loss']:.4f})")
+
+    cost = CostModel(num_layers=cfg.num_layers, offload=args.offload)
+    alpha = calibrate_alpha(conf_val, cost, correct_val)
+    cost = dataclasses.replace(cost, alpha=alpha)
+    print(f"alpha={alpha:.2f}")
+
+    runtime = EdgeCloudRuntime(cfg)
+    scfg = ServingConfig(batch_size=args.batch_size,
+                         max_samples=args.samples)
+
+    # the "traffic": the eval stream chopped into seeded random bursts
+    requests = list(itertools.islice(iter(OnlineStream(eval_data, seed=0)),
+                                     args.samples))
+    rng = np.random.default_rng(0)
+    bursts, i = [], 0
+    while i < len(requests):
+        size = int(rng.integers(1, 2 * args.mean_burst))
+        bursts.append(requests[i:i + size])
+        i += size
+
+    eng = Engine(runtime, params, cost, scfg)
+    for k, burst in enumerate(bursts):
+        eng.submit(burst)
+        if k == len(bursts) // 2:          # mid-session health check
+            waiting = eng.pending          # queue depth before the flush
+            mid = eng.drain()
+            print(f"[mid-session] served {mid.n} requests "
+                  f"({mid.samples_per_sec:.0f} samples/s, "
+                  f"exit-on-edge {1 - mid.offload_frac:.0%}; drain "
+                  f"flushed {waiting} waiting for a batch)")
+    report = eng.close()
+    print(f"[final]       served {report.n} requests in {len(bursts)} "
+          f"bursts: acc={report.accuracy:.3f} "
+          f"cost={report.cost_total:.0f}λ "
+          f"offload={report.offload_frac:.0%} "
+          f"exits/layer={report.exits_per_layer.tolist()}")
+
+    # the push-session is the one-shot facade, bit for bit — provided
+    # drain() is only called at batch boundaries the one-shot run also
+    # sees (mid-stream drains flush a ragged batch early, which is a
+    # *different* but equally valid schedule; here the halfway drain
+    # landed between bursts, so compare a fresh session without it)
+    clean = Engine(runtime, params, cost, scfg)
+    clean.submit(requests)
+    session = clean.close()
+    oneshot = serve(runtime, params, OnlineStream(eval_data, seed=0),
+                    cost, scfg)
+    np.testing.assert_array_equal(session.arms, oneshot.arms)
+    np.testing.assert_array_equal(session.preds, oneshot.preds)
+    np.testing.assert_array_equal(session.state["q"], oneshot.state["q"])
+    print("push-session == one-shot serve(): arms, preds, and bandit "
+          "state are bit-identical")
+
+
+if __name__ == "__main__":
+    main()

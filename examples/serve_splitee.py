@@ -7,6 +7,10 @@
      half) with the offload payload metered in bytes,
   4. compare SplitEE vs SplitEE-S vs final-exit / cascade baselines.
 
+The serving side is one declarative `ServingConfig` served through the
+`serve()` facade — the same config scales from the per-sample loop to
+micro-batches, data-parallel replicas, and multi-process clusters:
+
     PYTHONPATH=src python examples/serve_splitee.py --samples 800
 
 Multi-process serving spawns itself (serving/distributed.py):
@@ -39,9 +43,7 @@ from repro.core import CostModel, calibrate_alpha, confidence_cascade, final_exi
 from repro.data import OnlineStream
 from repro.launch.serve import build_testbed
 from repro.launch.train import exit_accuracy
-from repro.serving import (EdgeCloudRuntime, serve_stream,
-                           serve_stream_batched, serve_stream_distributed,
-                           serve_stream_sharded)
+from repro.serving import EdgeCloudRuntime, ServingConfig, serve
 
 
 def main():
@@ -104,33 +106,32 @@ def main():
         print(f"alpha={alpha:.2f} (labeled validation split, "
               f"fine-tune domain)")
 
+    # one declarative config; the facade resolves the runtime from it
+    if _IN_CLUSTER:
+        scfg = ServingConfig(
+            distributed=True,
+            fault_tolerant=os.environ.get(ENV_KV_DIR) is not None,
+            batch_size=max(args.batch_size, args.replicas, 1),
+            replicas=max(args.replicas, 1),
+            overlap_depth=args.overlap_depth,
+            heartbeat_timeout=args.heartbeat_timeout,
+            max_samples=args.samples)
+    elif args.replicas > 0:
+        scfg = ServingConfig(
+            path="sharded",
+            batch_size=max(args.batch_size, args.replicas),
+            replicas=args.replicas, overlap_depth=args.overlap_depth,
+            max_samples=args.samples)
+    else:
+        scfg = ServingConfig(batch_size=args.batch_size,
+                             max_samples=args.samples)
+
     runtime = EdgeCloudRuntime(cfg)
     results = {}
     for side_info, label in [(False, "SplitEE"), (True, "SplitEE-S")]:
         stream = OnlineStream(eval_data, seed=0)
-        if _IN_CLUSTER:
-            out = serve_stream_distributed(
-                runtime, params, stream, cost, side_info=side_info,
-                batch_size=max(args.batch_size, args.replicas, 1),
-                replicas=max(args.replicas, 1),
-                overlap_depth=args.overlap_depth,
-                max_samples=args.samples,
-                fault_tolerant=os.environ.get(ENV_KV_DIR) is not None,
-                heartbeat_timeout=args.heartbeat_timeout)
-        elif args.replicas > 0:
-            out = serve_stream_sharded(
-                runtime, params, stream, cost, side_info=side_info,
-                batch_size=max(args.batch_size, args.replicas),
-                replicas=args.replicas, overlap_depth=args.overlap_depth,
-                max_samples=args.samples)
-        elif args.batch_size > 1:
-            out = serve_stream_batched(
-                runtime, params, stream, cost, side_info=side_info,
-                batch_size=args.batch_size, max_samples=args.samples)
-        else:
-            out = serve_stream(runtime, params, stream, cost,
-                               side_info=side_info,
-                               max_samples=args.samples)
+        out = serve(runtime, params, stream, cost,
+                    dataclasses.replace(scfg, side_info=side_info))
         results[label] = out
         arms = np.bincount(out["arms"][-200:],
                            minlength=cfg.num_layers)
@@ -139,7 +140,8 @@ def main():
                   f"cost={out['cost_total']:.0f}λ "
                   f"offload={out['offload_frac']:.0%} "
                   f"({out['offload_bytes']/1e6:.2f} MB shipped) "
-                  f"modal split={int(arms.argmax()) + 1}")
+                  f"modal split={int(arms.argmax()) + 1} "
+                  f"[{out.path} path]")
 
     if not host0:
         return                      # one summary per cluster, from host 0

@@ -4,6 +4,15 @@ edge/cloud runtime — the paper's full pipeline (stages i-iii) end to end.
 
     PYTHONPATH=src python -m repro.launch.serve --samples 1500
 
+The serving side of a run is one declarative `ServingConfig`
+(serving/api.py), served through the `serve()` facade which picks the
+right runtime (sequential / batched / sharded / distributed) from the
+config. ``--config run.json`` rebuilds the *serving side* of a run from
+a saved config artifact (remaining serving flags override its fields);
+``--dump-config PATH`` writes the resolved config. Testbed flags
+(``--layers/--steps/--offload/--eval-domain``) describe the model, not
+the serving run, and must be repeated alongside ``--config``.
+
 Multi-process serving spawns itself: ``--distributed --num-processes 2``
 re-executes this driver as 2 jax.distributed workers (forced host
 devices on CPU), each building the same deterministic testbed and
@@ -32,14 +41,14 @@ from repro.core import (CostModel, calibrate_alpha, confidence_cascade,
 from repro.data import OnlineStream, make_dataset
 from repro.data.synthetic import DOMAINS, VOCAB
 from repro.launch.train import exit_accuracy, train_classifier
-from repro.serving import (EdgeCloudRuntime, serve_stream,
-                           serve_stream_batched, serve_stream_distributed,
-                           serve_stream_sharded)
+from repro.serving import EdgeCloudRuntime, ServingConfig, serve
 from repro.serving.distributed import (ENV_COORDINATOR, ENV_KV_DIR,
                                        cluster_identity,
                                        drive_respawned_cluster,
                                        ft_serving_context,
                                        init_distributed_from_env)
+
+DEFAULT_SAMPLES = 1000
 
 
 def build_testbed(*, layers: int = 6, steps: int = 300,
@@ -64,50 +73,101 @@ def build_testbed(*, layers: int = 6, steps: int = 300,
                                                        correct_val), log
 
 
+def add_serving_config_args(ap: argparse.ArgumentParser):
+    """Flags that override `ServingConfig` fields (defaults are None so
+    only explicitly-passed flags layer onto a ``--config`` file)."""
+    ap.add_argument("--config", default=None, metavar="PATH",
+                    help="load a ServingConfig JSON artifact; the flags "
+                         "below override its fields")
+    ap.add_argument("--dump-config", default=None, metavar="PATH",
+                    help="write the resolved ServingConfig JSON to PATH "
+                         "(the serving-side reproducibility artifact)")
+    ap.add_argument("--samples", type=int, default=None,
+                    help=f"sample cap (config: max_samples; default "
+                         f"{DEFAULT_SAMPLES} when no --config is given)")
+    ap.add_argument("--side-info", action="store_true", default=None,
+                    help="SplitEE-S: read all exits below the split "
+                         "(config: side_info)")
+    ap.add_argument("--batch-size", type=int, default=None,
+                    help="micro-batch size B; >1 selects the batched "
+                         "delayed-feedback runtime (config: batch_size)")
+    ap.add_argument("--mesh", action="store_true", default=None,
+                    help="serve through the sharded data-parallel runtime "
+                         "on a 1-D device mesh (config: mesh)")
+    ap.add_argument("--replicas", type=int, default=None,
+                    help="data-parallel replica count (config: replicas; "
+                         "needs that many visible devices; on CPU set "
+                         "XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--no-overlap", action="store_true", default=None,
+                    help="disable the async offload queue (config: "
+                         "overlap=false); cloud flushes resolve at their "
+                         "own batch boundary")
+    ap.add_argument("--overlap-depth", type=int, default=None,
+                    help="max in-flight cloud flushes K (config: "
+                         "overlap_depth; 1 = double buffering; feedback "
+                         "delay grows to <= (K+1)*B-1 rounds)")
+    ap.add_argument("--distributed", action="store_true", default=None,
+                    help="serve across jax.distributed processes (config: "
+                         "distributed); spawns --num-processes workers "
+                         "when run outside a cluster")
+    ap.add_argument("--fault-tolerant", action="store_true", default=None,
+                    help="serve through the resilient exchange (config: "
+                         "fault_tolerant); heartbeats + membership "
+                         "verdicts over a shared FileKV dir, supervised "
+                         "respawn + rejoin")
+    ap.add_argument("--heartbeat-timeout", type=float, default=None,
+                    help="seconds a host's heartbeat may be stale before "
+                         "it is declared dead (config: heartbeat_timeout; "
+                         "see docs/SERVING.md for sizing)")
+
+
+def serving_config_from_args(args) -> ServingConfig:
+    """Layer explicitly-passed CLI flags over the ``--config`` artifact
+    (or the defaults)."""
+    if args.config:
+        with open(args.config) as f:
+            base = ServingConfig.from_json(f.read())
+    else:
+        base = ServingConfig(max_samples=DEFAULT_SAMPLES)
+    overrides = {}
+    if args.samples is not None:
+        overrides["max_samples"] = args.samples
+    if args.side_info:
+        overrides["side_info"] = True
+    if args.batch_size is not None:
+        overrides["batch_size"] = args.batch_size
+    if args.mesh:
+        overrides["mesh"] = True
+    if args.replicas is not None:
+        overrides["replicas"] = args.replicas
+    if args.no_overlap:
+        overrides["overlap"] = False
+    if args.overlap_depth is not None:
+        overrides["overlap_depth"] = args.overlap_depth
+    if args.distributed:
+        overrides["distributed"] = True
+    if args.fault_tolerant:
+        overrides["fault_tolerant"] = True
+        overrides["distributed"] = True
+    if args.heartbeat_timeout is not None:
+        overrides["heartbeat_timeout"] = args.heartbeat_timeout
+    return dataclasses.replace(base, **overrides) if overrides else base
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--samples", type=int, default=1000)
+    add_serving_config_args(ap)
+    # testbed / cluster-shape flags (not part of the ServingConfig)
     ap.add_argument("--layers", type=int, default=6)
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--offload", type=float, default=5.0)
-    ap.add_argument("--side-info", action="store_true")
     ap.add_argument("--eval-domain", default="imdb_like")
-    ap.add_argument("--batch-size", type=int, default=1,
-                    help="micro-batch size B; >1 uses the batched "
-                         "delayed-feedback runtime (serving/batched.py)")
-    ap.add_argument("--mesh", action="store_true",
-                    help="serve through the sharded data-parallel runtime "
-                         "(serving/sharded.py) on a 1-D device mesh")
-    ap.add_argument("--replicas", type=int, default=1,
-                    help="data-parallel replica count for --mesh (needs "
-                         "that many visible devices; on CPU set XLA_FLAGS="
-                         "--xla_force_host_platform_device_count=N)")
-    ap.add_argument("--no-overlap", action="store_true",
-                    help="with --mesh/--distributed: disable the async "
-                         "offload queue (cloud flush resolves at its own "
-                         "batch boundary)")
-    ap.add_argument("--overlap-depth", type=int, default=1,
-                    help="max in-flight cloud flushes K for the async "
-                         "offload pipeline (1 = double buffering; "
-                         "feedback delay grows to <= (K+1)*B-1 rounds)")
-    ap.add_argument("--distributed", action="store_true",
-                    help="serve across jax.distributed processes "
-                         "(serving/distributed.py); spawns "
-                         "--num-processes workers when run outside a "
-                         "cluster (CPU hosts get forced host devices)")
     ap.add_argument("--num-processes", type=int, default=2,
                     help="worker count for --distributed self-spawn")
-    ap.add_argument("--fault-tolerant", action="store_true",
-                    help="with --distributed: serve through the "
-                         "resilient exchange (heartbeats + membership "
-                         "verdicts over a shared FileKV dir); the "
-                         "supervisor respawns a dead worker once and it "
-                         "rejoins from the KV-store state")
-    ap.add_argument("--heartbeat-timeout", type=float, default=5.0,
-                    help="seconds a host's heartbeat may be stale before "
-                         "it is declared dead (fault-tolerant mode); see "
-                         "docs/SERVING.md for how to size it")
     args = ap.parse_args()
+
+    scfg = serving_config_from_args(args)
 
     # worker mode iff the SPLITEE_* cluster env vars are present (set by
     # respawn_distributed); must run before any other jax use
@@ -115,20 +175,26 @@ def main():
                   or os.environ.get(ENV_KV_DIR) is not None)
     if in_cluster:
         init_distributed_from_env()
-    elif args.distributed:
-        if args.fault_tolerant:
+        if not scfg.distributed:      # workers always serve distributed
+            scfg = dataclasses.replace(scfg, distributed=True)
+    elif args.dump_config:            # driver process only, once
+        with open(args.dump_config, "w") as f:
+            f.write(scfg.to_json())
+        print(f"wrote serving config to {args.dump_config}")
+    if not in_cluster and scfg.distributed:
+        if scfg.fault_tolerant:
             # coordinator-free cluster over a FileKV dir: any worker
             # (host 0 included) can die without taking the transport
             # along, and the supervisor can respawn it to rejoin
             drive_respawned_cluster(
-                args.num_processes, devices_per_process=args.replicas,
+                args.num_processes, devices_per_process=scfg.replicas,
                 env={ENV_KV_DIR: tempfile.mkdtemp(prefix="splitee-kv-")},
                 coordinator=False, fail_fast=False, respawn=True,
-                watchdog_timeout=max(4 * args.heartbeat_timeout, 20.0),
+                watchdog_timeout=max(4 * scfg.heartbeat_timeout, 20.0),
                 startup_grace=600.0)
         else:
             drive_respawned_cluster(args.num_processes,
-                                    devices_per_process=args.replicas)
+                                    devices_per_process=scfg.replicas)
         return
 
     # fault-tolerant workers build their exchange (and, when respawned,
@@ -138,8 +204,9 @@ def main():
     exchange, init_state, skip = None, None, 0
     if fault_tolerant:
         exchange, init_state, skip = ft_serving_context(
-            heartbeat_timeout=args.heartbeat_timeout,
-            pipeline_depth=0 if args.no_overlap else args.overlap_depth)
+            heartbeat_timeout=scfg.heartbeat_timeout,
+            heartbeat_interval=scfg.heartbeat_interval,
+            pipeline_depth=scfg.overlap_depth if scfg.overlap else 0)
 
     import jax  # noqa: F401  (backend init after cluster bootstrap)
     host0 = (not in_cluster) or cluster_identity()[0] == 0
@@ -158,51 +225,34 @@ def main():
 
     runtime = EdgeCloudRuntime(cfg)
     stream = OnlineStream(eval_data, seed=0)
-    if args.distributed or in_cluster:
-        samples = args.samples - skip
-        if samples <= 0:
-            # rejoin ack landed at (or past) the stream's final fold:
-            # nothing left to serve, and max_samples=0 would mean
-            # "unlimited" to the serving loop
-            print(f"[fault-tolerant] rejoined at stream position {skip} "
-                  f"of {args.samples}: nothing left to serve")
-            return
+    path = scfg.resolved_path()
+    if path in ("sharded", "distributed"):
+        # bucket caps must divide over the data axis
+        scfg = dataclasses.replace(
+            scfg, batch_size=max(scfg.batch_size, scfg.replicas))
+    if path == "distributed":
+        if scfg.max_samples:          # capped run: shrink the cap by the
+            samples = scfg.max_samples - skip     # rejoiner's progress
+            if samples <= 0:
+                # rejoin ack landed at (or past) the stream's final
+                # fold: nothing left to serve, and max_samples=0 would
+                # mean "unlimited" to the serving loop
+                print(f"[fault-tolerant] rejoined at stream position "
+                      f"{skip} of {scfg.max_samples}: nothing left to "
+                      f"serve")
+                return
+            scfg = dataclasses.replace(scfg, max_samples=samples)
         if skip:                      # rejoined worker: resume mid-stream
             stream = itertools.islice(iter(stream), skip, None)
-        out = serve_stream_distributed(runtime, params, stream, cost,
-                                       side_info=args.side_info,
-                                       batch_size=max(args.batch_size,
-                                                      args.replicas),
-                                       replicas=args.replicas,
-                                       overlap=not args.no_overlap,
-                                       overlap_depth=args.overlap_depth,
-                                       max_samples=samples,
-                                       exchange=exchange,
-                                       init_state=init_state,
-                                       stream_offset=skip,
-                                       heartbeat_timeout=args.heartbeat_timeout)
-    elif args.mesh or args.replicas > 1:
-        out = serve_stream_sharded(runtime, params, stream, cost,
-                                   side_info=args.side_info,
-                                   batch_size=max(args.batch_size,
-                                                  args.replicas),
-                                   replicas=args.replicas,
-                                   overlap=not args.no_overlap,
-                                   overlap_depth=args.overlap_depth,
-                                   max_samples=args.samples)
-    elif args.batch_size > 1:
-        out = serve_stream_batched(runtime, params, stream, cost,
-                                   side_info=args.side_info,
-                                   batch_size=args.batch_size,
-                                   max_samples=args.samples)
+        out = serve(runtime, params, stream, cost, scfg,
+                    exchange=exchange, init_state=init_state,
+                    stream_offset=skip)
     else:
-        out = serve_stream(runtime, params, stream, cost,
-                           side_info=args.side_info,
-                           max_samples=args.samples)
+        out = serve(runtime, params, stream, cost, scfg)
     if not host0:
         return                      # one summary per cluster, from host 0
-    variant = "SplitEE-S" if args.side_info else "SplitEE"
-    if args.distributed or in_cluster:
+    variant = "SplitEE-S" if scfg.side_info else "SplitEE"
+    if path == "distributed":
         ov = out["overlap"]
         dist = out["distributed"]
         ft = " FT" if dist.get("fault_tolerant") else ""
@@ -218,16 +268,17 @@ def main():
         if dist.get("lost_samples"):
             print(f"[fault-tolerant] {dist['lost_samples']} samples lost "
                   f"with failed hosts' in-flight slices")
-    elif args.mesh or args.replicas > 1:
+    elif path == "sharded":
         ov = out["overlap"]
         variant += (f" (sharded R={out['replicas']} "
                     f"B={out['batch_size']} overlap="
                     f"{'K=%d' % ov['depth'] if ov['enabled'] else 'off'})")
-    elif args.batch_size > 1:
-        variant += f" (batched B={args.batch_size})"
+    elif path == "batched":
+        variant += f" (batched B={scfg.batch_size})"
     print(f"{variant}: n={out['n']} acc={out.get('accuracy', float('nan')):.3f} "
           f"cost={out['cost_total']:.0f}λ offload_frac={out['offload_frac']:.2f} "
-          f"offloaded={out['offload_bytes']/1e6:.1f}MB")
+          f"offloaded={out['offload_bytes']/1e6:.1f}MB "
+          f"({out['samples_per_sec']:.0f} samples/s)")
 
     if skip:
         return     # rejoined host 0: partial stream, baselines unmeaning

@@ -1,26 +1,34 @@
-from repro.serving.simulator import (  # noqa: F401
+"""Edge/cloud serving runtimes.
+
+The supported surface is the unified API (`serving/api.py`): declare a
+`ServingConfig`, call `serve(runtime, params, stream, cost, config)` for
+an offline stream or drive an `Engine` push-session for request-level
+traffic, and read the typed `ServeReport`. The four legacy
+`serve_stream*` entrypoints are deprecated thin wrappers over `serve`.
+"""
+from repro.serving.simulator import (
     EdgeCloudRuntime,
     serve_stream,
 )
-from repro.serving.batched import (  # noqa: F401
+from repro.serving.batched import (
     OffloadQueue,
     PendingFlush,
     serve_stream_batched,
 )
-from repro.serving.sharded import (  # noqa: F401
+from repro.serving.sharded import (
     serve_stream_sharded,
 )
-from repro.serving.kvstore import (  # noqa: F401
+from repro.serving.kvstore import (
     CoordinatorKV,
     FileKV,
     KVTimeout,
 )
-from repro.serving.faults import (  # noqa: F401
+from repro.serving.faults import (
     FAULT_KILL_EXIT,
     FaultInjector,
     parse_fault_plan,
 )
-from repro.serving.distributed import (  # noqa: F401
+from repro.serving.distributed import (
     ClusterReport,
     CoordinatorExchange,
     FencedHostError,
@@ -34,3 +42,45 @@ from repro.serving.distributed import (  # noqa: F401
     serve_stream_distributed,
     start_worker_heartbeat,
 )
+from repro.serving.api import (
+    Engine,
+    ServeReport,
+    ServingConfig,
+    serve,
+)
+
+__all__ = [
+    # unified serving API (the supported surface)
+    "Engine",
+    "ServeReport",
+    "ServingConfig",
+    "serve",
+    # runtime building blocks
+    "EdgeCloudRuntime",
+    "OffloadQueue",
+    "PendingFlush",
+    # cluster plumbing (distributed serving)
+    "ClusterReport",
+    "CoordinatorExchange",
+    "CoordinatorKV",
+    "FencedHostError",
+    "FileKV",
+    "KVTimeout",
+    "LoopbackExchange",
+    "ResilientExchange",
+    "ft_serving_context",
+    "init_distributed_from_env",
+    "make_resilient_exchange",
+    "run_distributed_subprocesses",
+    "run_supervised_cluster",
+    "start_worker_heartbeat",
+    # fault injection
+    "FAULT_KILL_EXIT",
+    "FaultInjector",
+    "parse_fault_plan",
+    # deprecated legacy entrypoints (thin wrappers over `serve`)
+    "serve_stream",
+    "serve_stream_batched",
+    "serve_stream_distributed",
+    "serve_stream_sharded",
+]

@@ -1,0 +1,589 @@
+"""Unified serving API: one declarative config, one facade, one report.
+
+The serving package grew four parallel entrypoints — `serve_stream`,
+`serve_stream_batched`, `serve_stream_sharded`,
+`serve_stream_distributed` — whose keyword lists drifted from 4 to 13+
+kwargs and which all returned loosely-shaped dicts. This module replaces
+that surface with three pieces:
+
+* `ServingConfig` — a frozen, validated, JSON-round-trippable dataclass
+  describing *what* to serve (batch size, replicas, overlap pipeline,
+  distribution, fault tolerance, policy knobs). A config is the one
+  reproducibility artifact: `launch/serve.py --config run.json` rebuilds
+  a run from it, `--dump-config` writes it.
+* `serve(runtime, params, stream, cost, config)` — the facade. Resolves
+  the cheapest serving path that satisfies the config (sequential ↔
+  batched ↔ sharded ↔ distributed — the existing bit-identity ladder:
+  each path is pinned bit-identical to the previous one under the
+  matching config, so path selection never changes the policy) and
+  returns a typed `ServeReport`.
+* `Engine` — a push-session over the same controller/queue machinery:
+  `submit(samples)` / `drain()` / `close()` instead of replaying a
+  finite offline stream. Incremental request-level traffic (the
+  millions-of-users shape) drives exactly the micro-batch schedule the
+  one-shot facade runs, so a push-session over the same samples is
+  bit-identical to the one-shot `serve()` call (pinned by
+  tests/test_serving_api.py).
+
+The legacy `serve_stream*` functions remain as deprecated thin wrappers
+delegating here; every call raises a `DeprecationWarning` (displayed
+once per call site by the stdlib registry, promoted to an error in CI).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+import warnings
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.rewards import CostModel
+from repro.serving.batched import _BatchedSession, _serve_stream_batched
+from repro.serving.distributed import _serve_stream_distributed
+from repro.serving.sharded import _ShardedSession, _serve_stream_sharded
+from repro.serving.simulator import EdgeCloudRuntime, _serve_stream_sequential
+
+PATHS = ("auto", "sequential", "batched", "sharded", "distributed")
+
+
+def _err(field: str, got, fix: str) -> str:
+    """Uniform actionable-message shape for config validation errors."""
+    return f"ServingConfig.{field} = {got!r} is invalid: {fix}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Declarative description of one serving run.
+
+    ``path`` pins a specific runtime ("sequential" | "batched" |
+    "sharded" | "distributed"); the default "auto" resolves to the
+    cheapest path that satisfies the rest of the config (see
+    `resolved_path`). All other fields are the union of the four legacy
+    entrypoints' keywords; fields a path does not use are ignored by it
+    (e.g. `overlap_depth` on the batched path).
+
+    Instances are frozen, validated at construction, and JSON
+    round-trippable (`to_json` / `from_json`) — a config file is a
+    complete, reproducible description of the serving side of a run.
+    """
+
+    # ---- path selection ------------------------------------------------
+    path: str = "auto"
+    # ---- micro-batching / policy (all paths) ---------------------------
+    batch_size: int = 1
+    side_info: bool = False           # SplitEE-S: read all exits <= depth
+    beta: float = 1.0                 # UCB exploration coefficient
+    max_samples: int = 0              # 0 = serve the stream to exhaustion
+    labels_for_accounting: bool = True
+    # ---- data parallelism (sharded / distributed) ----------------------
+    replicas: int = 1                 # per-process data-parallel replicas
+    mesh: bool = False                # force the sharded (mesh) runtime
+    # ---- async offload pipeline (sharded / distributed) ----------------
+    overlap: bool = True
+    overlap_depth: int = 1            # max in-flight cloud flushes K
+    # ---- multi-process serving -----------------------------------------
+    distributed: bool = False
+    fault_tolerant: bool = False
+    heartbeat_timeout: float = 5.0
+    heartbeat_interval: float = 0.25
+    # ---- diagnostics ---------------------------------------------------
+    record_trace: bool = False        # per-sample confidences (batched/sharded)
+    record_states: bool = False       # per-batch controller snapshots (distributed)
+
+    def __post_init__(self):
+        if self.path not in PATHS:
+            raise ValueError(_err("path", self.path,
+                                  f"choose one of {PATHS}"))
+        if self.batch_size < 1:
+            raise ValueError(_err(
+                "batch_size", self.batch_size,
+                "micro-batches need at least 1 sample; use batch_size=1 "
+                "for the per-sample sequential path"))
+        if self.replicas < 1:
+            raise ValueError(_err(
+                "replicas", self.replicas,
+                "the data-parallel replica count must be >= 1; use "
+                "replicas=1 for a single-device run"))
+        if self.overlap_depth < 1:
+            raise ValueError(_err(
+                "overlap_depth", self.overlap_depth,
+                "the offload pipeline keeps >= 1 cloud flush in flight "
+                "(1 = double buffering); to disable overlap entirely set "
+                "overlap=False instead"))
+        if self.beta <= 0:
+            raise ValueError(_err(
+                "beta", self.beta,
+                "the UCB exploration coefficient must be > 0 "
+                "(the paper uses 1.0)"))
+        if self.max_samples < 0:
+            raise ValueError(_err(
+                "max_samples", self.max_samples,
+                "use 0 to serve the stream to exhaustion, or a positive "
+                "sample cap"))
+        if self.heartbeat_timeout <= 0:
+            raise ValueError(_err(
+                "heartbeat_timeout", self.heartbeat_timeout,
+                "failure detection needs a positive staleness bound "
+                "(seconds; default 5.0)"))
+        if self.heartbeat_interval <= 0:
+            raise ValueError(_err(
+                "heartbeat_interval", self.heartbeat_interval,
+                "heartbeats must be stamped at a positive interval "
+                "(seconds; default 0.25)"))
+        if self.heartbeat_interval >= self.heartbeat_timeout:
+            raise ValueError(_err(
+                "heartbeat_interval", self.heartbeat_interval,
+                f"must be smaller than heartbeat_timeout "
+                f"({self.heartbeat_timeout}) or every host looks dead; "
+                f"keep timeout >= 10x interval"))
+        # path = "distributed" implies the distributed flag (normalized so
+        # JSON round-trips are stable)
+        if self.path == "distributed" and not self.distributed:
+            object.__setattr__(self, "distributed", True)
+        if self.distributed and self.path in ("sequential", "batched",
+                                              "sharded"):
+            raise ValueError(_err(
+                "distributed", True,
+                f"conflicts with path={self.path!r}; use path='auto' or "
+                f"path='distributed'"))
+        if self.fault_tolerant and not self.distributed:
+            raise ValueError(_err(
+                "fault_tolerant", True,
+                "fault tolerance is a property of the multi-process "
+                "runtime; set distributed=True (or path='distributed')"))
+        if self.record_states and not self.distributed:
+            raise ValueError(_err(
+                "record_states", True,
+                "per-batch controller snapshots are recorded by the "
+                "distributed runtime only; set distributed=True"))
+        if self.record_trace and self.path in ("sequential", "distributed"):
+            raise ValueError(_err(
+                "record_trace", True,
+                f"the per-sample confidence trace exists on the batched "
+                f"and sharded paths only, not path={self.path!r}"))
+        if self.record_trace and self.distributed:
+            raise ValueError(_err(
+                "record_trace", True,
+                "the distributed runtime records controller snapshots "
+                "(record_states), not per-sample traces"))
+        if self.mesh and self.path in ("sequential", "batched"):
+            raise ValueError(_err(
+                "mesh", True,
+                f"conflicts with path={self.path!r}; the mesh runtime is "
+                f"path='sharded' (or leave path='auto')"))
+        if self.replicas > 1 and self.path in ("sequential", "batched"):
+            raise ValueError(_err(
+                "replicas", self.replicas,
+                f"path={self.path!r} runs on one replica; use "
+                f"path='sharded'/'distributed' (or path='auto')"))
+        if self.batch_size > 1 and self.path == "sequential":
+            raise ValueError(_err(
+                "batch_size", self.batch_size,
+                "the sequential path serves one sample per round; use "
+                "path='batched' (or path='auto')"))
+
+    def resolved_path(self) -> str:
+        """The concrete runtime this config selects.
+
+        "auto" picks the cheapest path whose features cover the config:
+        multi-process wants the distributed runtime, replicas/mesh the
+        sharded one, micro-batches (or a trace) the batched one, and a
+        plain B=1 run the per-sample sequential loop. The bit-identity
+        ladder (sequential = batched@B=1 = sharded@R=1,sync =
+        distributed@H=1) means this selection never changes the policy —
+        only how much machinery runs.
+        """
+        if self.path != "auto":
+            return self.path
+        if self.distributed or self.fault_tolerant:
+            return "distributed"
+        if self.replicas > 1 or self.mesh:
+            return "sharded"
+        if self.batch_size > 1 or self.record_trace:
+            return "batched"
+        return "sequential"
+
+    # ------------------------------------------------------------- JSON
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2,
+                          sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ServingConfig":
+        raw = json.loads(text)
+        if not isinstance(raw, dict):
+            raise ValueError(
+                f"a ServingConfig JSON document must be an object, got "
+                f"{type(raw).__name__}")
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(raw) - fields)
+        if unknown:
+            raise ValueError(
+                f"unknown ServingConfig field(s) {unknown}; valid fields "
+                f"are {sorted(fields)}")
+        return cls(**raw)
+
+
+_REPORT_SECTIONS = ("overlap", "state", "trace", "distributed", "states")
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Typed result of one serving run (or `Engine` session).
+
+    Replaces the legacy entrypoints' ad-hoc dicts. For migration the
+    report is also dict-like (`report["arms"]`, `report.get("accuracy")`,
+    `"trace" in report`) with exactly the legacy keys plus the new typed
+    extras; optional fields that are absent behave like missing keys.
+    """
+
+    n: int
+    preds: np.ndarray
+    cost_total: float
+    offload_frac: float
+    offload_bytes: int
+    arms: np.ndarray
+    rewards: np.ndarray
+    exited: Optional[np.ndarray] = None
+    exits_per_layer: Optional[np.ndarray] = None   # exit counts, arm 0..L-1
+    accuracy: Optional[float] = None
+    batch_size: Optional[int] = None
+    replicas: Optional[int] = None
+    path: Optional[str] = None                     # runtime that served
+    wall_s: Optional[float] = None
+    samples_per_sec: Optional[float] = None
+    overlap: Optional[Dict[str, Any]] = None       # offload pipeline stats
+    state: Optional[Dict[str, Any]] = None         # final controller (q, n, t)
+    trace: Optional[Dict[str, list]] = None        # per-sample confidences
+    distributed: Optional[Dict[str, Any]] = None   # cluster section
+    states: Optional[List[Dict[str, Any]]] = None  # per-batch snapshots
+
+    @classmethod
+    def from_raw(cls, raw: Dict[str, Any], *, path: str, num_layers: int,
+                 wall_s: Optional[float] = None) -> "ServeReport":
+        """Wrap a serving runtime's raw result dict."""
+        arms = np.asarray(raw["arms"])
+        exited = raw.get("exited")
+        exits_per_layer = None
+        if exited is not None:
+            exited = np.asarray(exited).astype(bool)
+            exits_per_layer = np.bincount(arms[exited],
+                                          minlength=num_layers)
+        wall = float(wall_s) if wall_s is not None else None
+        return cls(
+            n=int(raw["n"]),
+            preds=np.asarray(raw["preds"]),
+            cost_total=float(raw["cost_total"]),
+            offload_frac=float(raw["offload_frac"]),
+            offload_bytes=int(raw["offload_bytes"]),
+            arms=arms,
+            rewards=np.asarray(raw["rewards"]),
+            exited=exited,
+            exits_per_layer=exits_per_layer,
+            accuracy=raw.get("accuracy"),
+            batch_size=raw.get("batch_size"),
+            replicas=raw.get("replicas"),
+            path=path,
+            wall_s=wall,
+            samples_per_sec=(round(int(raw["n"]) / wall, 2)
+                             if wall else None),
+            overlap=raw.get("overlap"),
+            state=raw.get("state"),
+            trace=raw.get("trace"),
+            distributed=raw.get("distributed"),
+            states=raw.get("states"),
+        )
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Legacy-shaped dict: every non-None field under its old key."""
+        out = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if v is not None:
+                out[f.name] = v
+        return out
+
+    # dict-like migration surface ---------------------------------------
+    def __getitem__(self, key: str):
+        d = self.to_dict()
+        if key not in d:
+            raise KeyError(key)
+        return d[key]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.to_dict()
+
+    def get(self, key: str, default=None):
+        return self.to_dict().get(key, default)
+
+    def keys(self):
+        return self.to_dict().keys()
+
+    def values(self):
+        return self.to_dict().values()
+
+    def items(self):
+        return self.to_dict().items()
+
+    def __iter__(self):
+        return iter(self.to_dict())
+
+    def __len__(self) -> int:
+        return len(self.to_dict())
+
+
+# ----------------------------------------------------------------- facade
+
+def serve(runtime: EdgeCloudRuntime, params, stream, cost: CostModel,
+          config: Optional[ServingConfig] = None, *,
+          mesh=None, exchange=None, init_state=None,
+          stream_offset: int = 0, **overrides) -> ServeReport:
+    """Serve a sample stream under a `ServingConfig`.
+
+    Resolves the config to one of the four runtimes (see
+    `ServingConfig.resolved_path`) and returns a `ServeReport`. Under a
+    matching config the dispatched runtime is exactly the legacy one, so
+    the result is bit-identical to the corresponding `serve_stream*`
+    call (pinned by tests/test_serving_api.py).
+
+    Keyword-only arguments carry *runtime resources* that cannot live in
+    a JSON config:
+
+    ``mesh``           explicit `jax.sharding.Mesh` with a "data" axis
+                       (sharded / distributed paths).
+    ``exchange``       cross-host transport override (distributed path).
+    ``init_state``     controller snapshot to restore before serving —
+                       the distributed rejoin path.
+    ``stream_offset``  samples the caller already consumed (rejoin).
+
+    Any extra keyword arguments are treated as `ServingConfig` field
+    overrides: ``serve(rt, p, s, c, batch_size=32)`` is shorthand for
+    replacing the field on the (default) config.
+    """
+    if config is None:
+        config = ServingConfig()
+    if overrides:
+        config = dataclasses.replace(config, **overrides)
+    path = config.resolved_path()
+    if mesh is not None and path not in ("sharded", "distributed"):
+        raise ValueError(
+            f"an explicit mesh applies to the sharded/distributed paths; "
+            f"this config resolves to {path!r} (set replicas/mesh/"
+            f"distributed on the config)")
+    if (exchange is not None or init_state is not None or stream_offset) \
+            and path != "distributed":
+        raise ValueError(
+            f"exchange/init_state/stream_offset belong to the "
+            f"distributed path; this config resolves to {path!r}")
+    common = dict(side_info=config.side_info, beta=config.beta,
+                  max_samples=config.max_samples,
+                  labels_for_accounting=config.labels_for_accounting)
+    t0 = time.perf_counter()
+    if path == "sequential":
+        raw = _serve_stream_sequential(runtime, params, stream, cost,
+                                       **common)
+    elif path == "batched":
+        raw = _serve_stream_batched(runtime, params, stream, cost,
+                                    batch_size=config.batch_size,
+                                    record_trace=config.record_trace,
+                                    **common)
+    elif path == "sharded":
+        raw = _serve_stream_sharded(runtime, params, stream, cost,
+                                    batch_size=config.batch_size,
+                                    replicas=config.replicas, mesh=mesh,
+                                    overlap=config.overlap,
+                                    overlap_depth=config.overlap_depth,
+                                    record_trace=config.record_trace,
+                                    **common)
+    else:
+        raw = _serve_stream_distributed(
+            runtime, params, stream, cost,
+            batch_size=config.batch_size, replicas=config.replicas,
+            mesh=mesh, overlap=config.overlap,
+            overlap_depth=config.overlap_depth, exchange=exchange,
+            fault_tolerant=config.fault_tolerant,
+            heartbeat_timeout=config.heartbeat_timeout,
+            heartbeat_interval=config.heartbeat_interval,
+            init_state=init_state, stream_offset=stream_offset,
+            record_states=config.record_states, **common)
+    wall = time.perf_counter() - t0
+    return ServeReport.from_raw(raw, path=path,
+                                num_layers=cost.num_layers, wall_s=wall)
+
+
+# ----------------------------------------------------------------- engine
+
+class Engine:
+    """Push-session serving: request-level traffic over the same
+    controller/queue machinery as the one-shot `serve()` facade.
+
+    Where `serve()` replays a finite offline stream, an `Engine` accepts
+    samples as they arrive — the millions-of-users shape:
+
+        eng = Engine(runtime, params, cost, ServingConfig(batch_size=32))
+        eng.submit(request_samples)     # any number, any chunking
+        report = eng.drain()            # serve everything submitted so far
+        final = eng.close()
+
+    Internally this is a thin incremental driver: submitted samples are
+    buffered and pushed through the batched (`_BatchedSession`) or
+    sharded (`_ShardedSession`) micro-batch schedule as soon as a full
+    micro-batch accumulates; `drain()` serves the ragged tail and
+    resolves any in-flight overlapped cloud flushes. Because the pushes
+    reproduce exactly the batch sequence `microbatches()` would have
+    produced, a session that submits the same samples (with `drain`
+    called once, at the end) is **bit-identical** to the one-shot
+    `serve()` call — pinned by tests/test_serving_api.py.
+
+    Sequential configs are served through the batched machinery at
+    ``B=1`` (bit-identical by the ladder). Distributed configs are
+    rejected: every host of a cluster must consume the same logical
+    stream, which push traffic into one process cannot guarantee — run
+    `serve()` with a distributed config on each host instead.
+    """
+
+    def __init__(self, runtime: EdgeCloudRuntime, params, cost: CostModel,
+                 config: Optional[ServingConfig] = None, *, mesh=None):
+        self.config = config if config is not None else ServingConfig()
+        self.cost = cost
+        path = self.config.resolved_path()
+        if path == "distributed":
+            raise ValueError(
+                "Engine does not drive the distributed runtime: every "
+                "host must consume the same logical stream, which a "
+                "single-process push-session cannot guarantee; call "
+                "serve() with the distributed ServingConfig on each host")
+        c = self.config
+        self._path = path             # what serve() would report
+        if path == "sharded":
+            self._sess = _ShardedSession(
+                runtime, params, cost, batch_size=c.batch_size,
+                replicas=c.replicas, mesh=mesh, overlap=c.overlap,
+                overlap_depth=c.overlap_depth, side_info=c.side_info,
+                beta=c.beta, labels_for_accounting=c.labels_for_accounting,
+                record_trace=c.record_trace)
+        else:
+            if mesh is not None:
+                raise ValueError(
+                    f"an explicit mesh applies to the sharded path; this "
+                    f"config resolves to {path!r}")
+            # sequential configs ride the batched machinery at B=1 —
+            # bit-identical by the ladder, so the label stays honest
+            self._sess = _BatchedSession(
+                runtime, params, cost, batch_size=c.batch_size,
+                side_info=c.side_info, beta=c.beta,
+                labels_for_accounting=c.labels_for_accounting,
+                record_trace=c.record_trace)
+        self._buf: List[Dict[str, Any]] = []
+        self._submitted = 0
+        self._dropped = 0
+        self._closed = False
+        self._t0 = time.perf_counter()
+        self._final: Optional[ServeReport] = None
+
+    # ------------------------------------------------------------- state
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    @property
+    def pending(self) -> int:
+        """Samples submitted but not yet pushed through a micro-batch."""
+        return len(self._buf)
+
+    @property
+    def dropped(self) -> int:
+        """Samples rejected because the config's ``max_samples`` cap was
+        already reached when they were submitted."""
+        return self._dropped
+
+    # --------------------------------------------------------- lifecycle
+    def submit(self, samples) -> int:
+        """Push samples into the session; returns how many were accepted.
+
+        ``samples`` is one sample dict or an iterable of them. Full
+        micro-batches are served immediately; a ragged remainder waits
+        for more traffic (or `drain`). Once the config's ``max_samples``
+        cap is reached, submit stops consuming the iterable (so an
+        unbounded source returns promptly, mirroring how the one-shot
+        facade stops pulling its stream at the cap); the one sample
+        consumed to detect the cap — and any sample submitted after it —
+        is rejected and counted in `Engine.dropped`.
+        """
+        if self._closed:
+            raise RuntimeError("Engine is closed; create a new session")
+        if isinstance(samples, dict):
+            samples = [samples]
+        cap = self.config.max_samples
+        accepted = 0
+        for s in samples:
+            if cap and self._submitted >= cap:
+                self._dropped += 1
+                break
+            self._buf.append(s)
+            self._submitted += 1
+            accepted += 1
+            if len(self._buf) >= self.config.batch_size:
+                self._sess.push(self._buf)
+                self._buf = []
+        return accepted
+
+    def drain(self) -> ServeReport:
+        """Serve everything submitted so far (including a ragged tail),
+        resolve all in-flight cloud flushes, and report."""
+        if self._closed:
+            raise RuntimeError("Engine is closed; create a new session")
+        if self._buf:
+            self._sess.push(self._buf)
+            self._buf = []
+        self._sess.drain()
+        return self._report()
+
+    def close(self) -> ServeReport:
+        """Drain and retire the session; further submits raise.
+        Idempotent — repeated closes return the final report."""
+        if self._closed:
+            return self._final
+        self._final = self.drain()
+        self._closed = True
+        return self._final
+
+    def __enter__(self) -> "Engine":
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is None:
+            self.close()
+        return False
+
+    def _report(self) -> ServeReport:
+        return ServeReport.from_raw(
+            self._sess.result(), path=self._path,
+            num_layers=self.cost.num_layers,
+            wall_s=time.perf_counter() - self._t0)
+
+
+# ------------------------------------------------------------ deprecation
+
+def _warn_legacy(name: str):
+    """Emit the legacy-entrypoint DeprecationWarning.
+
+    Raised on EVERY call (the stdlib warnings registry deduplicates the
+    default display to once per call site) so CI's
+    ``-W error:serve_stream:DeprecationWarning`` filter catches any
+    internal caller regressing onto a wrapper, not just the first."""
+    warnings.warn(
+        f"{name}() is deprecated: build a repro.serving.ServingConfig "
+        f"and call repro.serving.serve() (or drive an Engine session); "
+        f"see docs/SERVING.md for the kwarg -> config field mapping",
+        DeprecationWarning, stacklevel=3)
+
+
+__all__ = [
+    "Engine",
+    "ServeReport",
+    "ServingConfig",
+    "serve",
+]

@@ -236,39 +236,50 @@ def _edge_phase(runtime: EdgeCloudRuntime, params, tokens: np.ndarray,
     return conf_paths, batch_preds
 
 
-def serve_stream_batched(runtime: EdgeCloudRuntime, params, stream,
-                         cost: CostModel, *, batch_size: int = 32,
-                         side_info: bool = False, beta: float = 1.0,
-                         max_samples: int = 0,
-                         labels_for_accounting: bool = True,
-                         record_trace: bool = False) -> Dict[str, Any]:
-    """Serve a sample stream through the batched SplitEE pipeline.
+class _BatchedSession:
+    """Incremental driver of the batched micro-batch schedule.
 
-    Same contract as `serve_stream`, plus `batch_size` (micro-batch B)
-    and `record_trace` (per-sample observed confidences + final-layer
-    confidences, for the differential test's NumPy replay).
+    One `push(batch)` runs exactly the per-batch body of the offline
+    loop (select → edge → cloud flush → delayed-feedback fold), so the
+    one-shot `_serve_stream_batched` and the push-mode `api.Engine` are
+    the same machinery by construction. `result()` is non-destructive —
+    a session can report mid-stream and keep serving.
     """
-    ctl = SplitEEController(cost, beta=beta, side_info=side_info)
-    queue = OffloadQueue(runtime, params)
-    correct, preds = [], []
-    trace: Optional[Dict[str, list]] = (
-        {"conf_path": [], "conf_L": []} if record_trace else None)
-    n = 0
-    for batch in microbatches(stream, batch_size, max_samples):
+
+    def __init__(self, runtime: EdgeCloudRuntime, params, cost: CostModel,
+                 *, batch_size: int = 32, side_info: bool = False,
+                 beta: float = 1.0, labels_for_accounting: bool = True,
+                 record_trace: bool = False):
+        self.runtime = runtime
+        self.params = params
+        self.cost = cost
+        self.batch_size = batch_size
+        self.side_info = side_info
+        self.labels_for_accounting = labels_for_accounting
+        self.ctl = SplitEEController(cost, beta=beta, side_info=side_info)
+        self.queue = OffloadQueue(runtime, params)
+        self.correct: List[int] = []
+        self.preds: List[int] = []
+        self.trace: Optional[Dict[str, list]] = (
+            {"conf_path": [], "conf_L": []} if record_trace else None)
+        self.n = 0
+
+    def push(self, batch):
+        """Serve one micro-batch (any size >= 1; ragged tails included)."""
         B = len(batch)
-        arms = ctl.choose_splits(B)
+        arms = self.ctl.choose_splits(B)
         tokens = np.stack([np.asarray(s["tokens"]) for s in batch])
         seq_len = tokens.shape[1]
 
         # ---- edge: one launch per distinct chosen depth ----------------
         conf_paths, batch_preds = _edge_phase(
-            runtime, params, tokens, arms, cost, queue,
-            side_info=side_info)
+            self.runtime, self.params, tokens, arms, self.cost, self.queue,
+            side_info=self.side_info)
 
         # ---- cloud: flush the offload queue in depth buckets -----------
-        cloud = queue.flush()
+        cloud = self.queue.flush()
         conf_Ls: List[Optional[float]] = [None] * B
-        ob = runtime.offload_bytes(1, seq_len)
+        ob = self.runtime.offload_bytes(1, seq_len)
         obs = [0] * B
         for s, (c_L, p_L) in cloud.items():
             conf_Ls[s] = c_L
@@ -276,31 +287,77 @@ def serve_stream_batched(runtime: EdgeCloudRuntime, params, stream,
             obs[s] = ob
 
         # ---- delayed-feedback batch update -----------------------------
-        ctl.update_batch(arms, conf_paths, conf_Ls, obs)
+        self.ctl.update_batch(arms, conf_paths, conf_Ls, obs)
 
-        preds.extend(batch_preds)
-        if trace is not None:
-            trace["conf_path"].extend(conf_paths)
-            trace["conf_L"].extend(conf_Ls)
-        if labels_for_accounting:
+        self.preds.extend(batch_preds)
+        if self.trace is not None:
+            self.trace["conf_path"].extend(conf_paths)
+            self.trace["conf_L"].extend(conf_Ls)
+        if self.labels_for_accounting:
             for s, sample in enumerate(batch):
                 if "labels" in sample:
-                    correct.append(int(batch_preds[s] == int(sample["labels"])))
-        n += B
+                    self.correct.append(
+                        int(batch_preds[s] == int(sample["labels"])))
+        self.n += B
 
-    hist = {k: np.asarray(v) for k, v in ctl.history.items()}
-    out = {
-        "n": n,
-        "batch_size": batch_size,
-        "preds": np.asarray(preds),
-        "cost_total": float(hist["cost"].sum()),
-        "offload_frac": float(1.0 - hist["exited"].mean()) if n else 0.0,
-        "offload_bytes": int(hist["offload_bytes"].sum()),
-        "arms": hist["arm"],
-        "rewards": hist["reward"],
-    }
-    if correct:
-        out["accuracy"] = float(np.mean(correct))
-    if trace is not None:
-        out["trace"] = trace
-    return out
+    def drain(self):
+        """Synchronous path: every flush resolved at its own boundary —
+        nothing in flight. Kept for interface parity with the sharded
+        session, whose drain resolves the overlap ring."""
+
+    def result(self) -> Dict[str, Any]:
+        ctl = self.ctl
+        hist = {k: np.asarray(v) for k, v in ctl.history.items()}
+        out = {
+            "n": self.n,
+            "batch_size": self.batch_size,
+            "preds": np.asarray(self.preds),
+            "cost_total": float(hist["cost"].sum()),
+            "offload_frac": (float(1.0 - hist["exited"].mean())
+                             if self.n else 0.0),
+            "offload_bytes": int(hist["offload_bytes"].sum()),
+            "arms": hist["arm"],
+            "rewards": hist["reward"],
+            "exited": hist["exited"],
+            "state": ctl.snapshot(),
+        }
+        if self.correct:
+            out["accuracy"] = float(np.mean(self.correct))
+        if self.trace is not None:
+            out["trace"] = self.trace
+        return out
+
+
+def _serve_stream_batched(runtime: EdgeCloudRuntime, params, stream,
+                          cost: CostModel, *, batch_size: int = 32,
+                          side_info: bool = False, beta: float = 1.0,
+                          max_samples: int = 0,
+                          labels_for_accounting: bool = True,
+                          record_trace: bool = False) -> Dict[str, Any]:
+    """Offline driver: replay a finite stream through a batched session."""
+    sess = _BatchedSession(runtime, params, cost, batch_size=batch_size,
+                           side_info=side_info, beta=beta,
+                           labels_for_accounting=labels_for_accounting,
+                           record_trace=record_trace)
+    for batch in microbatches(stream, batch_size, max_samples):
+        sess.push(batch)
+    return sess.result()
+
+
+def serve_stream_batched(runtime: EdgeCloudRuntime, params, stream,
+                         cost: CostModel, *, batch_size: int = 32,
+                         side_info: bool = False, beta: float = 1.0,
+                         max_samples: int = 0,
+                         labels_for_accounting: bool = True,
+                         record_trace: bool = False):
+    """Deprecated: build a `ServingConfig(path="batched", ...)` and call
+    `repro.serving.serve` instead. Returns the facade's `ServeReport`
+    (dict-compatible with the legacy result)."""
+    from repro.serving.api import ServingConfig, _warn_legacy, serve
+    _warn_legacy("serve_stream_batched")
+    config = ServingConfig(path="batched", batch_size=batch_size,
+                           side_info=side_info, beta=beta,
+                           max_samples=max_samples,
+                           labels_for_accounting=labels_for_accounting,
+                           record_trace=record_trace)
+    return serve(runtime, params, stream, cost, config)

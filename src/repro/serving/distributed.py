@@ -786,19 +786,20 @@ def _unpack_host_update(raw: bytes) -> Tuple[ShardUpdate, np.ndarray]:
     return shard, z["preds"]
 
 
-def serve_stream_distributed(runtime: EdgeCloudRuntime, params, stream,
-                             cost: CostModel, *, batch_size: int = 32,
-                             replicas: int = 1, mesh: Optional[Mesh] = None,
-                             overlap: bool = True, overlap_depth: int = 1,
-                             side_info: bool = False, beta: float = 1.0,
-                             max_samples: int = 0,
-                             labels_for_accounting: bool = True,
-                             exchange=None, fault_tolerant: bool = False,
-                             heartbeat_timeout: float = 5.0,
-                             heartbeat_interval: float = 0.25,
-                             init_state: Optional[Dict[str, Any]] = None,
-                             stream_offset: int = 0,
-                             record_states: bool = False) -> Dict[str, Any]:
+def _serve_stream_distributed(runtime: EdgeCloudRuntime, params, stream,
+                              cost: CostModel, *, batch_size: int = 32,
+                              replicas: int = 1,
+                              mesh: Optional[Mesh] = None,
+                              overlap: bool = True, overlap_depth: int = 1,
+                              side_info: bool = False, beta: float = 1.0,
+                              max_samples: int = 0,
+                              labels_for_accounting: bool = True,
+                              exchange=None, fault_tolerant: bool = False,
+                              heartbeat_timeout: float = 5.0,
+                              heartbeat_interval: float = 0.25,
+                              init_state: Optional[Dict[str, Any]] = None,
+                              stream_offset: int = 0,
+                              record_states: bool = False) -> Dict[str, Any]:
     """Serve a sample stream across all processes of a jax.distributed run.
 
     Same contract as `serve_stream_sharded` — ``replicas`` is the
@@ -985,6 +986,41 @@ def serve_stream_distributed(runtime: EdgeCloudRuntime, params, stream,
     if record_states:
         out["states"] = states
     return out
+
+
+def serve_stream_distributed(runtime: EdgeCloudRuntime, params, stream,
+                             cost: CostModel, *, batch_size: int = 32,
+                             replicas: int = 1, mesh: Optional[Mesh] = None,
+                             overlap: bool = True, overlap_depth: int = 1,
+                             side_info: bool = False, beta: float = 1.0,
+                             max_samples: int = 0,
+                             labels_for_accounting: bool = True,
+                             exchange=None, fault_tolerant: bool = False,
+                             heartbeat_timeout: float = 5.0,
+                             heartbeat_interval: float = 0.25,
+                             init_state: Optional[Dict[str, Any]] = None,
+                             stream_offset: int = 0,
+                             record_states: bool = False):
+    """Deprecated: build a `ServingConfig(path="distributed", ...)` and
+    call `repro.serving.serve` instead (runtime resources — an explicit
+    Mesh, a prebuilt exchange, a rejoin snapshot — go through the
+    facade's keyword-only arguments). Returns the facade's `ServeReport`
+    (dict-compatible with the legacy result)."""
+    from repro.serving.api import ServingConfig, _warn_legacy, serve
+    _warn_legacy("serve_stream_distributed")
+    config = ServingConfig(path="distributed", batch_size=batch_size,
+                           replicas=replicas, overlap=overlap,
+                           overlap_depth=overlap_depth,
+                           side_info=side_info, beta=beta,
+                           max_samples=max_samples,
+                           labels_for_accounting=labels_for_accounting,
+                           fault_tolerant=fault_tolerant,
+                           heartbeat_timeout=heartbeat_timeout,
+                           heartbeat_interval=heartbeat_interval,
+                           record_states=record_states)
+    return serve(runtime, params, stream, cost, config, mesh=mesh,
+                 exchange=exchange, init_state=init_state,
+                 stream_offset=stream_offset)
 
 
 # --------------------------------------------------------------------------

@@ -91,15 +91,18 @@ class _BatchCtx:
     members: Optional[List[int]] = None   # FT: hosts this batch sliced over
 
 
-def _drive_pipeline(stream, *, batch_size: int, max_samples: int,
-                    overlap: bool, overlap_depth: int,
-                    process_batch, finalize) -> int:
+class _PipelineDriver:
     """The depth-K serving schedule shared by the sharded and distributed
-    runtimes: ``process_batch(batch, start)`` selects arms and dispatches
-    one micro-batch's edge work + cloud flush (returning its _BatchCtx),
-    up to ``overlap_depth`` contexts stay in flight, and ``finalize``
-    folds them FIFO. Asserts the feedback-delay bound <= (K+1)*B - 1 at
-    every fold. Returns the batch count.
+    runtimes, incremental form: ``process_batch(batch, start)`` selects
+    arms and dispatches one micro-batch's edge work + cloud flush
+    (returning its _BatchCtx), up to ``overlap_depth`` contexts stay in
+    flight, and ``finalize`` folds them FIFO. Asserts the feedback-delay
+    bound <= (K+1)*B - 1 at every fold.
+
+    ``push`` serves one micro-batch; ``drain`` folds the remaining ring.
+    The offline entry points wrap this in `_drive_pipeline`; the
+    push-mode `api.Engine` drives it one submit at a time — same object,
+    same schedule, which is what makes the two bit-identical.
 
     The in-flight bound is enforced at two cooperating levels with the
     same K: this deque bounds *fold order* (controller updates land
@@ -109,41 +112,66 @@ def _drive_pipeline(stream, *, batch_size: int, max_samples: int,
     objects FIFO and ``resolve`` is idempotent, so whichever fires first
     the results are identical; only where blocking happens shifts.
     """
-    inflight: collections.deque[_BatchCtx] = collections.deque()
-    selected = 0                       # arms drawn so far (global rounds)
-    batches = 0
-    depth_eff = overlap_depth if overlap else 0
 
-    def fold(ctx: _BatchCtx):
+    def __init__(self, *, batch_size: int, overlap: bool,
+                 overlap_depth: int, process_batch, finalize):
+        self.batch_size = batch_size
+        self.overlap = overlap
+        self.overlap_depth = overlap_depth
+        self.process_batch = process_batch
+        self.finalize = finalize
+        self.inflight: collections.deque[_BatchCtx] = collections.deque()
+        self.selected = 0              # arms drawn so far (global rounds)
+        self.batches = 0
+
+    def _fold(self, ctx: _BatchCtx):
         # feedback-delay bound: the oldest sample of this batch has seen
         # at most (K+1)*B - 1 later selections before its update lands.
-        assert selected - 1 - ctx.start <= (depth_eff + 1) * batch_size - 1, (
-            f"feedback delay {selected - 1 - ctx.start} exceeds "
-            f"(K+1)*B-1 = {(depth_eff + 1) * batch_size - 1}")
-        finalize(ctx)
+        depth_eff = self.overlap_depth if self.overlap else 0
+        bound = (depth_eff + 1) * self.batch_size - 1
+        assert self.selected - 1 - ctx.start <= bound, (
+            f"feedback delay {self.selected - 1 - ctx.start} exceeds "
+            f"(K+1)*B-1 = {bound}")
+        self.finalize(ctx)
 
-    for batch in microbatches(stream, batch_size, max_samples):
-        ctx = process_batch(batch, selected)
-        selected += len(batch)
-        batches += 1
-        if overlap:
+    def push(self, batch):
+        ctx = self.process_batch(batch, self.selected)
+        self.selected += len(batch)
+        self.batches += 1
+        if self.overlap:
             # depth-K pipeline: cloud launches from the last up-to-K
             # batches stay in flight behind this batch's edge phase;
             # once the ring is full the oldest resolves and folds.
-            inflight.append(ctx)
-            while len(inflight) > overlap_depth:
-                oldest = inflight.popleft()
+            self.inflight.append(ctx)
+            while len(self.inflight) > self.overlap_depth:
+                oldest = self.inflight.popleft()
                 oldest.overlapped = True
-                fold(oldest)
+                self._fold(oldest)
         else:
-            fold(ctx)
-    while inflight:                    # final drain, FIFO
-        ctx = inflight.popleft()
-        # all but the stream's last in-flight batch had later edge work
-        # dispatched behind them
-        ctx.overlapped = bool(inflight)
-        fold(ctx)
-    return batches
+            self._fold(ctx)
+
+    def drain(self):
+        while self.inflight:           # final drain, FIFO
+            ctx = self.inflight.popleft()
+            # all but the last in-flight batch had later edge work
+            # dispatched behind them
+            ctx.overlapped = bool(self.inflight)
+            self._fold(ctx)
+
+
+def _drive_pipeline(stream, *, batch_size: int, max_samples: int,
+                    overlap: bool, overlap_depth: int,
+                    process_batch, finalize) -> int:
+    """Offline driver: replay a finite stream through a `_PipelineDriver`.
+    Returns the batch count."""
+    driver = _PipelineDriver(batch_size=batch_size, overlap=overlap,
+                             overlap_depth=overlap_depth,
+                             process_batch=process_batch,
+                             finalize=finalize)
+    for batch in microbatches(stream, batch_size, max_samples):
+        driver.push(batch)
+    driver.drain()
+    return driver.batches
 
 
 def _resolve_cloud(runtime: EdgeCloudRuntime, ctx: _BatchCtx):
@@ -180,26 +208,155 @@ def _serve_result(ctl: SplitEEController, *, n: int, batch_size: int,
         "exited": hist["exited"],
         "overlap": {"enabled": overlap, "depth": overlap_depth,
                     "batches": batches, "batches_overlapped": overlapped},
-        "state": {"q": np.asarray(ctl.state.q).copy(),
-                  "n": np.asarray(ctl.state.n).copy(),
-                  "t": int(ctl.state.t)},
+        "state": ctl.snapshot(),
     }
     if correct:
         out["accuracy"] = float(np.mean(correct))
     return out
 
 
-def serve_stream_sharded(runtime: EdgeCloudRuntime, params, stream,
-                         cost: CostModel, *, batch_size: int = 32,
-                         replicas: int = 1, mesh: Optional[Mesh] = None,
-                         overlap: bool = True, overlap_depth: int = 1,
-                         side_info: bool = False,
-                         beta: float = 1.0, max_samples: int = 0,
-                         labels_for_accounting: bool = True,
-                         record_trace: bool = False) -> Dict[str, Any]:
-    """Serve a sample stream through the sharded SplitEE pipeline.
+class _ShardedSession:
+    """Incremental driver of the sharded micro-batch schedule.
 
-    Same contract as `serve_stream_batched`, plus:
+    Owns the mesh placement, controller, offload queue, and the depth-K
+    `_PipelineDriver`; one `push(batch)` runs exactly one round of the
+    offline loop, so the one-shot `_serve_stream_sharded` and the
+    push-mode `api.Engine` are the same machinery by construction.
+
+    Serving semantics (what ``replicas``/``overlap``/``overlap_depth``
+    mean, and the bit-identity ladder back to the batched path) are
+    documented in the module docstring above.
+    """
+
+    def __init__(self, runtime: EdgeCloudRuntime, params, cost: CostModel,
+                 *, batch_size: int = 32, replicas: int = 1,
+                 mesh: Optional[Mesh] = None, overlap: bool = True,
+                 overlap_depth: int = 1, side_info: bool = False,
+                 beta: float = 1.0, labels_for_accounting: bool = True,
+                 record_trace: bool = False):
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        if overlap_depth < 1:
+            raise ValueError(
+                f"overlap_depth must be >= 1, got {overlap_depth}")
+        if mesh is None:
+            mesh = make_serving_mesh(replicas)
+        if "data" not in mesh.axis_names:
+            raise ValueError(
+                f"mesh needs a 'data' axis, got {mesh.axis_names}")
+        if replicas > mesh.shape["data"]:
+            raise ValueError(f"replicas={replicas} exceeds data axis "
+                             f"size {mesh.shape['data']}")
+
+        self.runtime = runtime
+        self.cost = cost
+        self.batch_size = batch_size
+        self.replicas = replicas
+        self.overlap = overlap
+        self.overlap_depth = overlap_depth
+        self.side_info = side_info
+        self.labels_for_accounting = labels_for_accounting
+
+        self.put = _data_put(mesh)
+        amap = {"model": "model" if "model" in mesh.axis_names else None,
+                "fsdp": None}
+        self.params = jax.device_put(
+            params, param_shardings(mesh, params, axis_map=amap))
+
+        self.ctl = SplitEEController(cost, beta=beta, side_info=side_info)
+        self.queue = OffloadQueue(runtime, self.params, put=self.put)
+        self.correct: List[int] = []
+        self.preds: List[int] = []
+        self.trace: Optional[Dict[str, list]] = (
+            {"conf_path": [], "conf_L": []} if record_trace else None)
+        self.n = 0
+        self.overlapped = 0
+        self._driver = _PipelineDriver(
+            batch_size=batch_size, overlap=overlap,
+            overlap_depth=overlap_depth,
+            process_batch=self._process_batch, finalize=self._finalize)
+
+    def _process_batch(self, batch, start: int) -> _BatchCtx:
+        """Select arms, launch the batch's edge buckets, dispatch flush."""
+        B = len(batch)
+        arms = self.ctl.choose_splits(B)
+        tokens = np.stack([np.asarray(s["tokens"]) for s in batch])
+
+        # ---- edge: one data-parallel launch per distinct chosen depth --
+        conf_paths, batch_preds = _edge_phase(
+            self.runtime, self.params, tokens, arms, self.cost, self.queue,
+            side_info=self.side_info, put=self.put, replicas=self.replicas)
+
+        # ---- cloud: dispatch the flush; resolve now or K batches later -
+        pending = self.queue.flush_async(
+            min_rows=self.replicas,
+            depth=self.overlap_depth if self.overlap else None)
+        labels = [int(s["labels"]) if "labels" in s else None
+                  for s in batch]
+        return _BatchCtx(arms=arms, conf_paths=conf_paths,
+                         batch_preds=batch_preds, labels=labels,
+                         seq_len=tokens.shape[1], pending=pending,
+                         start=start)
+
+    def _finalize(self, ctx: _BatchCtx):
+        """Resolve the cloud flush, merge per-replica stats, book results."""
+        B = len(ctx.arms)
+        conf_Ls, obs = _resolve_cloud(self.runtime, ctx)
+        # per-replica shard summaries, merged at the batch boundary
+        shards = []
+        lo = 0
+        for size in _shard_sizes(B, self.replicas):
+            hi = lo + size
+            if size:
+                shards.append(self.ctl.prepare_shard_update(
+                    ctx.arms[lo:hi], ctx.conf_paths[lo:hi],
+                    conf_Ls[lo:hi], obs[lo:hi]))
+            lo = hi
+        self.ctl.merge_shard_updates(shards)
+        self.preds.extend(ctx.batch_preds)
+        if self.trace is not None:
+            self.trace["conf_path"].extend(ctx.conf_paths)
+            self.trace["conf_L"].extend(conf_Ls)
+        if self.labels_for_accounting:
+            for s in range(B):
+                if ctx.labels[s] is not None:
+                    self.correct.append(
+                        int(ctx.batch_preds[s] == ctx.labels[s]))
+        if ctx.overlapped:
+            self.overlapped += 1
+        self.n += B
+
+    def push(self, batch):
+        """Serve one micro-batch (any size >= 1; ragged tails included)."""
+        self._driver.push(batch)
+
+    def drain(self):
+        """Resolve and fold every in-flight overlapped cloud flush."""
+        self._driver.drain()
+
+    def result(self) -> Dict[str, Any]:
+        out = _serve_result(self.ctl, n=self.n, batch_size=self.batch_size,
+                            replicas=self.replicas, preds=self.preds,
+                            correct=self.correct, overlap=self.overlap,
+                            overlap_depth=self.overlap_depth,
+                            batches=self._driver.batches,
+                            overlapped=self.overlapped)
+        if self.trace is not None:
+            out["trace"] = self.trace
+        return out
+
+
+def _serve_stream_sharded(runtime: EdgeCloudRuntime, params, stream,
+                          cost: CostModel, *, batch_size: int = 32,
+                          replicas: int = 1, mesh: Optional[Mesh] = None,
+                          overlap: bool = True, overlap_depth: int = 1,
+                          side_info: bool = False,
+                          beta: float = 1.0, max_samples: int = 0,
+                          labels_for_accounting: bool = True,
+                          record_trace: bool = False) -> Dict[str, Any]:
+    """Offline driver: replay a finite stream through a sharded session.
+
+    Same contract as `_serve_stream_batched`, plus:
 
     ``replicas``  data-parallel replica count (must fit the mesh's
                   "data" axis; a 1-D mesh over the first `replicas`
@@ -216,90 +373,37 @@ def serve_stream_sharded(runtime: EdgeCloudRuntime, params, stream,
                   latencies at the price of feedback delayed by up to
                   (K+1)*B-1 rounds (asserted at every fold).
     """
-    if replicas < 1:
-        raise ValueError(f"replicas must be >= 1, got {replicas}")
-    if overlap_depth < 1:
-        raise ValueError(f"overlap_depth must be >= 1, got {overlap_depth}")
-    if mesh is None:
-        mesh = make_serving_mesh(replicas)
-    if "data" not in mesh.axis_names:
-        raise ValueError(f"mesh needs a 'data' axis, got {mesh.axis_names}")
-    if replicas > mesh.shape["data"]:
-        raise ValueError(f"replicas={replicas} exceeds data axis "
-                         f"size {mesh.shape['data']}")
+    sess = _ShardedSession(runtime, params, cost, batch_size=batch_size,
+                           replicas=replicas, mesh=mesh, overlap=overlap,
+                           overlap_depth=overlap_depth, side_info=side_info,
+                           beta=beta,
+                           labels_for_accounting=labels_for_accounting,
+                           record_trace=record_trace)
+    for batch in microbatches(stream, batch_size, max_samples):
+        sess.push(batch)
+    sess.drain()
+    return sess.result()
 
-    put = _data_put(mesh)
-    amap = {"model": "model" if "model" in mesh.axis_names else None,
-            "fsdp": None}
-    params = jax.device_put(params,
-                            param_shardings(mesh, params, axis_map=amap))
 
-    ctl = SplitEEController(cost, beta=beta, side_info=side_info)
-    queue = OffloadQueue(runtime, params, put=put)
-    correct, preds = [], []
-    trace: Optional[Dict[str, list]] = (
-        {"conf_path": [], "conf_L": []} if record_trace else None)
-    n = 0
-    overlapped = 0
-
-    def process_batch(batch, start: int) -> _BatchCtx:
-        """Select arms, launch the batch's edge buckets, dispatch flush."""
-        B = len(batch)
-        arms = ctl.choose_splits(B)
-        tokens = np.stack([np.asarray(s["tokens"]) for s in batch])
-
-        # ---- edge: one data-parallel launch per distinct chosen depth --
-        conf_paths, batch_preds = _edge_phase(
-            runtime, params, tokens, arms, cost, queue,
-            side_info=side_info, put=put, replicas=replicas)
-
-        # ---- cloud: dispatch the flush; resolve now or K batches later -
-        pending = queue.flush_async(
-            min_rows=replicas, depth=overlap_depth if overlap else None)
-        labels = [int(s["labels"]) if "labels" in s else None
-                  for s in batch]
-        return _BatchCtx(arms=arms, conf_paths=conf_paths,
-                         batch_preds=batch_preds, labels=labels,
-                         seq_len=tokens.shape[1], pending=pending,
-                         start=start)
-
-    def finalize(ctx: _BatchCtx):
-        """Resolve the cloud flush, merge per-replica stats, book results."""
-        nonlocal n, overlapped
-        B = len(ctx.arms)
-        conf_Ls, obs = _resolve_cloud(runtime, ctx)
-        # per-replica shard summaries, merged at the batch boundary
-        shards = []
-        lo = 0
-        for size in _shard_sizes(B, replicas):
-            hi = lo + size
-            if size:
-                shards.append(ctl.prepare_shard_update(
-                    ctx.arms[lo:hi], ctx.conf_paths[lo:hi],
-                    conf_Ls[lo:hi], obs[lo:hi]))
-            lo = hi
-        ctl.merge_shard_updates(shards)
-        preds.extend(ctx.batch_preds)
-        if trace is not None:
-            trace["conf_path"].extend(ctx.conf_paths)
-            trace["conf_L"].extend(conf_Ls)
-        if labels_for_accounting:
-            for s in range(B):
-                if ctx.labels[s] is not None:
-                    correct.append(int(ctx.batch_preds[s] == ctx.labels[s]))
-        if ctx.overlapped:
-            overlapped += 1
-        n += B
-
-    batches = _drive_pipeline(
-        stream, batch_size=batch_size, max_samples=max_samples,
-        overlap=overlap, overlap_depth=overlap_depth,
-        process_batch=process_batch, finalize=finalize)
-
-    out = _serve_result(ctl, n=n, batch_size=batch_size, replicas=replicas,
-                        preds=preds, correct=correct, overlap=overlap,
-                        overlap_depth=overlap_depth, batches=batches,
-                        overlapped=overlapped)
-    if trace is not None:
-        out["trace"] = trace
-    return out
+def serve_stream_sharded(runtime: EdgeCloudRuntime, params, stream,
+                         cost: CostModel, *, batch_size: int = 32,
+                         replicas: int = 1, mesh: Optional[Mesh] = None,
+                         overlap: bool = True, overlap_depth: int = 1,
+                         side_info: bool = False,
+                         beta: float = 1.0, max_samples: int = 0,
+                         labels_for_accounting: bool = True,
+                         record_trace: bool = False):
+    """Deprecated: build a `ServingConfig(path="sharded", ...)` and call
+    `repro.serving.serve` instead (pass an explicit Mesh via
+    ``serve(..., mesh=...)``). Returns the facade's `ServeReport`
+    (dict-compatible with the legacy result)."""
+    from repro.serving.api import ServingConfig, _warn_legacy, serve
+    _warn_legacy("serve_stream_sharded")
+    config = ServingConfig(path="sharded", batch_size=batch_size,
+                           replicas=replicas, overlap=overlap,
+                           overlap_depth=overlap_depth,
+                           side_info=side_info, beta=beta,
+                           max_samples=max_samples,
+                           labels_for_accounting=labels_for_accounting,
+                           record_trace=record_trace)
+    return serve(runtime, params, stream, cost, config, mesh=mesh)

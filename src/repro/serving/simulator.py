@@ -122,10 +122,11 @@ class EdgeCloudRuntime:
             * jnp.dtype(self.cfg.dtype).itemsize
 
 
-def serve_stream(runtime: EdgeCloudRuntime, params, stream, cost: CostModel,
-                 *, side_info: bool = False, beta: float = 1.0,
-                 max_samples: int = 0,
-                 labels_for_accounting: bool = True) -> Dict[str, Any]:
+def _serve_stream_sequential(runtime: EdgeCloudRuntime, params, stream,
+                             cost: CostModel, *, side_info: bool = False,
+                             beta: float = 1.0, max_samples: int = 0,
+                             labels_for_accounting: bool = True,
+                             ) -> Dict[str, Any]:
     """Stream samples through the online SplitEE controller + edge/cloud
     runtime. Unsupervised: labels (if present) are used only for reporting.
     """
@@ -167,13 +168,30 @@ def serve_stream(runtime: EdgeCloudRuntime, params, stream, cost: CostModel,
     hist = {k: np.asarray(v) for k, v in ctl.history.items()}
     out = {
         "n": n,
+        "batch_size": 1,       # keeps the report shape uniform across paths
         "preds": np.asarray(preds),
         "cost_total": float(hist["cost"].sum()),
         "offload_frac": float(1.0 - hist["exited"].mean()),
         "offload_bytes": int(hist["offload_bytes"].sum()),
         "arms": hist["arm"],
         "rewards": hist["reward"],
+        "exited": hist["exited"],
+        "state": ctl.snapshot(),
     }
     if correct:
         out["accuracy"] = float(np.mean(correct))
     return out
+
+
+def serve_stream(runtime: EdgeCloudRuntime, params, stream, cost: CostModel,
+                 *, side_info: bool = False, beta: float = 1.0,
+                 max_samples: int = 0, labels_for_accounting: bool = True):
+    """Deprecated: build a `ServingConfig(path="sequential", ...)` and
+    call `repro.serving.serve` instead. Returns the facade's
+    `ServeReport` (dict-compatible with the legacy result)."""
+    from repro.serving.api import ServingConfig, _warn_legacy, serve
+    _warn_legacy("serve_stream")
+    config = ServingConfig(path="sequential", side_info=side_info,
+                           beta=beta, max_samples=max_samples,
+                           labels_for_accounting=labels_for_accounting)
+    return serve(runtime, params, stream, cost, config)

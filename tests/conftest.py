@@ -1,7 +1,6 @@
 import dataclasses
 
 import jax
-import numpy as np
 import pytest
 
 # NOTE: no XLA_FLAGS here — smoke tests and benches must see ONE device.

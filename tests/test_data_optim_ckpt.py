@@ -1,6 +1,4 @@
 """Substrate tests: synthetic data, profiles, optimizer, checkpointing."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,7 +9,7 @@ except ImportError:          # optional dep: run a vendored mini-fallback
     from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.checkpoint import load_pytree, save_pytree
-from repro.data import DOMAINS, make_dataset
+from repro.data import make_dataset
 from repro.data.profiles import PROFILE_DATASETS, simulate_exit_profiles
 from repro.data.stream import OnlineStream, batch_iterator
 from repro.optim import adamw_init, adamw_update, clip_by_global_norm

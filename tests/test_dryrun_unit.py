@@ -2,7 +2,6 @@
 HLO collective parsing, depth-reduction, and input-spec construction for
 every (arch x shape) combination (pure eval_shape)."""
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
@@ -75,7 +74,7 @@ def test_long500k_decode_caches_are_subquadratic():
         cfg = get_config(arch)
         model = build_model(cfg)
         specs = model.input_specs(shape)
-        cache_bytes = sum(l.size * l.dtype.itemsize
-                          for l in jax.tree.leaves(specs["caches"]))
+        cache_bytes = sum(leaf.size * leaf.dtype.itemsize
+                          for leaf in jax.tree.leaves(specs["caches"]))
         # window 8192 / SSM state keeps caches small even stacked x layers
         assert cache_bytes < 60e9, (arch, cache_bytes / 1e9)

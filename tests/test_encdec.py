@@ -1,12 +1,10 @@
 """Seamless enc-dec backbone behaviours beyond the generic smoke tests."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import f32_cfg, make_batch
+from conftest import f32_cfg
 from repro.configs import get_smoke_config
 from repro.models import encdec
 from repro.models.api import build_model

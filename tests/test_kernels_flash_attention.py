@@ -1,6 +1,5 @@
 """Kernel sweep: Pallas flash attention vs jnp oracle (interpret mode)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,7 +1,5 @@
 """Per-architecture smoke tests (deliverable f): reduced same-family
 variant, one forward + one train step on CPU; asserts shapes + no NaNs."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -4,14 +4,13 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:          # optional dep: run a vendored mini-fallback
     from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import (CostModel, cumulative_regret, init_state,
-                        per_sample_rewards, run_many, run_stream,
+                        run_many, run_stream,
                         bandit_step, oracle_arm)
 
 L = 12

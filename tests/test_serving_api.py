@@ -1,0 +1,381 @@
+"""Unified serving API (serving/api.py): config validation + JSON
+round-trip, the `serve()` facade pinned bit-identical to every legacy
+`serve_stream*` entrypoint under the matching config, `Engine`
+push-sessions pinned bit-identical to the one-shot facade, report
+shape, and the legacy wrappers' deprecation contract.
+"""
+import dataclasses
+import itertools
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import CostModel
+from repro.data import OnlineStream, make_dataset
+from repro.data.synthetic import VOCAB
+from repro.serving import (EdgeCloudRuntime, Engine, ServeReport,
+                           ServingConfig, serve, serve_stream,
+                           serve_stream_batched, serve_stream_distributed,
+                           serve_stream_sharded)
+
+# the legacy entrypoints below are exercised deliberately; their
+# deprecation warnings are the subject of one test, noise in the rest
+pytestmark = pytest.mark.filterwarnings("ignore:serve_stream")
+
+
+def _legacy(fn, *args, **kwargs):
+    """Call a deprecated entrypoint with its warning suppressed."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return fn(*args, **kwargs)
+
+
+@pytest.fixture(scope="module")
+def served():
+    import jax
+    from repro.models.api import build_model
+    base = get_smoke_config("elasticbert12")
+    cfg = dataclasses.replace(
+        base, num_layers=3, d_model=32, num_heads=2, num_kv_heads=2,
+        d_ff=128, vocab_size=VOCAB, num_classes=2, dtype="float32")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    eval_data = make_dataset("imdb_like", 160, seed=2, seq_len=16)
+    rt = EdgeCloudRuntime(cfg)
+    cost = CostModel(num_layers=cfg.num_layers, alpha=0.6, offload=3.0)
+    return cfg, params, rt, cost, eval_data
+
+
+# ------------------------------------------------------ config validation
+
+@pytest.mark.parametrize("kwargs,needle", [
+    (dict(batch_size=0), "batch_size"),
+    (dict(replicas=0), "replicas"),
+    (dict(replicas=-2), "replicas"),
+    (dict(overlap_depth=0), "overlap_depth"),
+    (dict(beta=0.0), "beta"),
+    (dict(max_samples=-1), "max_samples"),
+    (dict(heartbeat_timeout=0.0), "heartbeat_timeout"),
+    (dict(heartbeat_interval=-0.5), "heartbeat_interval"),
+    (dict(heartbeat_timeout=0.2, heartbeat_interval=0.5),
+     "heartbeat_interval"),
+    (dict(path="bogus"), "path"),
+    (dict(fault_tolerant=True), "fault_tolerant"),
+    (dict(record_states=True), "record_states"),
+    (dict(record_trace=True, path="sequential"), "record_trace"),
+    (dict(record_trace=True, distributed=True), "record_trace"),
+    (dict(distributed=True, path="batched"), "distributed"),
+    (dict(mesh=True, path="batched"), "mesh"),
+    (dict(replicas=2, path="batched"), "replicas"),
+    (dict(batch_size=4, path="sequential"), "batch_size"),
+])
+def test_config_validation_actionable(kwargs, needle):
+    """Bad configs raise at construction, naming the offending field."""
+    with pytest.raises(ValueError) as exc:
+        ServingConfig(**kwargs)
+    assert needle in str(exc.value)
+
+
+def test_config_validation_messages_explain_the_fix():
+    with pytest.raises(ValueError) as exc:
+        ServingConfig(replicas=0)
+    assert "replicas=1" in str(exc.value)        # tells the user the fix
+    with pytest.raises(ValueError) as exc:
+        ServingConfig(overlap_depth=0)
+    assert "overlap=False" in str(exc.value)     # disabling != depth 0
+    with pytest.raises(ValueError) as exc:
+        ServingConfig(heartbeat_timeout=1.0, heartbeat_interval=2.0)
+    assert "heartbeat_timeout" in str(exc.value)
+
+
+def test_config_json_roundtrip():
+    cfg = ServingConfig(batch_size=16, replicas=2, mesh=True,
+                        overlap=False, overlap_depth=3, side_info=True,
+                        beta=0.7, max_samples=128,
+                        labels_for_accounting=False)
+    assert ServingConfig.from_json(cfg.to_json()) == cfg
+    # distributed normalization survives the round trip
+    d = ServingConfig(path="distributed", fault_tolerant=True,
+                      heartbeat_timeout=2.5)
+    back = ServingConfig.from_json(d.to_json())
+    assert back == d
+    assert back.distributed is True
+    # defaults round-trip too
+    assert ServingConfig.from_json(ServingConfig().to_json()) \
+        == ServingConfig()
+
+
+def test_config_from_json_rejects_unknown_fields():
+    with pytest.raises(ValueError) as exc:
+        ServingConfig.from_json('{"replicaz": 2, "batch_size": 8}')
+    msg = str(exc.value)
+    assert "replicaz" in msg and "replicas" in msg  # names valid fields
+
+
+def test_resolved_path_auto():
+    assert ServingConfig().resolved_path() == "sequential"
+    assert ServingConfig(batch_size=8).resolved_path() == "batched"
+    assert ServingConfig(record_trace=True).resolved_path() == "batched"
+    assert ServingConfig(replicas=2).resolved_path() == "sharded"
+    assert ServingConfig(mesh=True).resolved_path() == "sharded"
+    assert ServingConfig(distributed=True).resolved_path() == "distributed"
+    assert ServingConfig(path="sharded").resolved_path() == "sharded"
+
+
+# ----------------------------------------- serve() vs legacy entrypoints
+
+def _assert_reports_bit_identical(got, ref, *, state=True):
+    assert got["n"] == ref["n"]
+    np.testing.assert_array_equal(got["arms"], ref["arms"])
+    np.testing.assert_array_equal(got["preds"], ref["preds"])
+    np.testing.assert_array_equal(got["rewards"], ref["rewards"])
+    np.testing.assert_array_equal(got["exited"], ref["exited"])
+    assert got["cost_total"] == ref["cost_total"]
+    assert got["offload_bytes"] == ref["offload_bytes"]
+    assert got.get("accuracy") == ref.get("accuracy")
+    if state:
+        np.testing.assert_array_equal(got["state"]["q"], ref["state"]["q"])
+        np.testing.assert_array_equal(got["state"]["n"], ref["state"]["n"])
+        assert got["state"]["t"] == ref["state"]["t"]
+
+
+def test_serve_matches_legacy_sequential(served):
+    _, params, rt, cost, eval_data = served
+    ref = _legacy(serve_stream, rt, params, OnlineStream(eval_data, seed=0),
+                  cost, max_samples=48)
+    got = serve(rt, params, OnlineStream(eval_data, seed=0), cost,
+                ServingConfig(max_samples=48))
+    assert got.path == "sequential"
+    _assert_reports_bit_identical(got, ref)
+
+
+def test_serve_matches_legacy_batched(served):
+    _, params, rt, cost, eval_data = served
+    ref = _legacy(serve_stream_batched, rt, params,
+                  OnlineStream(eval_data, seed=0), cost, batch_size=8,
+                  max_samples=80)
+    got = serve(rt, params, OnlineStream(eval_data, seed=0), cost,
+                ServingConfig(batch_size=8, max_samples=80))
+    assert got.path == "batched"
+    _assert_reports_bit_identical(got, ref)
+
+
+@pytest.mark.parametrize("overlap,depth", [(False, 1), (True, 2)])
+def test_serve_matches_legacy_sharded(served, overlap, depth):
+    _, params, rt, cost, eval_data = served
+    kw = dict(batch_size=16, replicas=1, overlap=overlap,
+              overlap_depth=depth, max_samples=80)
+    ref = _legacy(serve_stream_sharded, rt, params,
+                  OnlineStream(eval_data, seed=0), cost, **kw)
+    got = serve(rt, params, OnlineStream(eval_data, seed=0), cost,
+                ServingConfig(path="sharded", **kw))
+    assert got.path == "sharded"
+    _assert_reports_bit_identical(got, ref)
+    assert got["overlap"] == ref["overlap"]
+
+
+def test_serve_matches_legacy_distributed_loopback(served):
+    """Single-process distributed (loopback exchange) under the facade."""
+    _, params, rt, cost, eval_data = served
+    kw = dict(batch_size=16, overlap=True, overlap_depth=2, max_samples=80)
+    ref = _legacy(serve_stream_distributed, rt, params,
+                  OnlineStream(eval_data, seed=0), cost, **kw)
+    got = serve(rt, params, OnlineStream(eval_data, seed=0), cost,
+                ServingConfig(distributed=True, **kw))
+    assert got.path == "distributed"
+    _assert_reports_bit_identical(got, ref)
+    assert got["distributed"] == ref["distributed"]
+
+
+def test_serve_rejects_mismatched_runtime_resources(served):
+    _, params, rt, cost, eval_data = served
+    with pytest.raises(ValueError, match="exchange"):
+        serve(rt, params, OnlineStream(eval_data, seed=0), cost,
+              ServingConfig(batch_size=8), exchange=object())
+    with pytest.raises(ValueError, match="mesh"):
+        serve(rt, params, OnlineStream(eval_data, seed=0), cost,
+              ServingConfig(), mesh=object())
+
+
+def test_serve_kwarg_overrides(served):
+    """serve(..., field=value) is shorthand for replacing config fields."""
+    _, params, rt, cost, eval_data = served
+    got = serve(rt, params, OnlineStream(eval_data, seed=0), cost,
+                batch_size=8, max_samples=40)
+    ref = serve(rt, params, OnlineStream(eval_data, seed=0), cost,
+                ServingConfig(batch_size=8, max_samples=40))
+    _assert_reports_bit_identical(got, ref)
+
+
+# -------------------------------------------------------- report contract
+
+def test_report_shape_and_mapping(served):
+    cfg, params, rt, cost, eval_data = served
+    rep = serve(rt, params, OnlineStream(eval_data, seed=0), cost,
+                ServingConfig(batch_size=8, max_samples=40))
+    assert isinstance(rep, ServeReport)
+    # typed accessors and the dict-like migration surface agree
+    np.testing.assert_array_equal(rep.arms, rep["arms"])
+    assert rep.n == rep["n"] == 40
+    assert rep.accuracy == rep.get("accuracy")
+    assert "trace" not in rep and rep.get("trace") is None
+    with pytest.raises(KeyError):
+        rep["not_a_field"]
+    # exits-per-layer section: counts exits at each arm, sums to the
+    # number of exited samples
+    assert rep.exits_per_layer.shape == (cfg.num_layers,)
+    assert rep.exits_per_layer.sum() == int(np.sum(rep.exited))
+    assert rep.offload_frac == pytest.approx(
+        1.0 - rep.exits_per_layer.sum() / rep.n)
+    # throughput section
+    assert rep.wall_s > 0 and rep.samples_per_sec > 0
+    assert set(rep.to_dict()) >= {"n", "preds", "arms", "rewards",
+                                  "cost_total", "path"}
+    # full dict protocol, as the legacy result dicts supported
+    assert set(iter(rep)) == set(rep.keys()) == set(dict(rep.items()))
+    assert len(rep) == len(list(rep.values()))
+
+
+# ------------------------------------------------- Engine push-session
+
+def test_engine_bit_identical_to_serve_batched(served):
+    _, params, rt, cost, eval_data = served
+    scfg = ServingConfig(batch_size=8, max_samples=80)
+    oneshot = serve(rt, params, OnlineStream(eval_data, seed=0), cost, scfg)
+    samples = list(itertools.islice(iter(OnlineStream(eval_data, seed=0)),
+                                    100))                # > cap: dropped
+    eng = Engine(rt, params, cost, scfg)
+    accepted = 0
+    for i in range(0, len(samples), 13):                 # ragged bursts
+        accepted += eng.submit(samples[i:i + 13])
+    rep = eng.close()
+    assert rep.n == accepted == 80                       # cap honored
+    assert eng.dropped > 0                               # and surfaced
+    _assert_reports_bit_identical(rep, oneshot)
+
+
+def test_engine_cap_stops_consuming_unbounded_source(served):
+    """Once the cap is reached, submit must stop pulling the iterable —
+    the push API is pitched at endless traffic."""
+    _, params, rt, cost, eval_data = served
+    eng = Engine(rt, params, cost, ServingConfig(batch_size=8,
+                                                 max_samples=16))
+    endless = itertools.cycle(iter(OnlineStream(eval_data, seed=0)))
+    assert eng.submit(endless) == 16                     # returns promptly
+    assert eng.close().n == 16
+
+
+def test_engine_bit_identical_to_serve_sharded_overlap(served):
+    """Push-mode must reproduce the depth-K overlapped pipeline exactly:
+    the same micro-batches pass through the same _PipelineDriver ring."""
+    _, params, rt, cost, eval_data = served
+    scfg = ServingConfig(path="sharded", batch_size=16, overlap=True,
+                         overlap_depth=2, max_samples=80)
+    oneshot = serve(rt, params, OnlineStream(eval_data, seed=0), cost, scfg)
+    eng = Engine(rt, params, cost, scfg)
+    for s in itertools.islice(iter(OnlineStream(eval_data, seed=0)), 80):
+        eng.submit(s)                                    # one at a time
+    rep = eng.close()
+    _assert_reports_bit_identical(rep, oneshot)
+    assert rep["overlap"] == oneshot["overlap"]
+
+
+def test_engine_sequential_config_uses_b1_ladder(served):
+    """A sequential config drives the batched machinery at B=1 — the
+    ladder's bit-identity makes that invisible in the results."""
+    _, params, rt, cost, eval_data = served
+    scfg = ServingConfig(max_samples=32)
+    oneshot = serve(rt, params, OnlineStream(eval_data, seed=0), cost, scfg)
+    eng = Engine(rt, params, cost, scfg)
+    eng.submit(list(itertools.islice(iter(OnlineStream(eval_data, seed=0)),
+                                     32)))
+    rep = eng.close()
+    assert rep.path == oneshot.path == "sequential"
+    _assert_reports_bit_identical(rep, oneshot)
+
+
+def test_engine_lifecycle(served):
+    _, params, rt, cost, eval_data = served
+    samples = list(itertools.islice(iter(OnlineStream(eval_data, seed=0)),
+                                    30))
+    eng = Engine(rt, params, cost, ServingConfig(batch_size=8))
+    assert eng.submit(samples[:20]) == 20
+    assert eng.pending == 4                   # 2 full batches served
+    mid = eng.drain()                         # ragged tail flushed
+    assert mid.n == 20 and eng.pending == 0
+    eng.submit(samples[20:])                  # session continues
+    final = eng.close()
+    assert final.n == 30
+    assert eng.closed
+    assert eng.close() is final               # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit(samples[:1])
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.drain()
+
+
+def test_engine_rejects_distributed(served):
+    _, params, rt, cost, _ = served
+    with pytest.raises(ValueError, match="distributed"):
+        Engine(rt, params, cost, ServingConfig(distributed=True))
+
+
+def test_engine_context_manager(served):
+    _, params, rt, cost, eval_data = served
+    with Engine(rt, params, cost, ServingConfig(batch_size=4)) as eng:
+        eng.submit(list(itertools.islice(
+            iter(OnlineStream(eval_data, seed=0)), 10)))
+    assert eng.closed and eng.close().n == 10
+
+
+# ----------------------------------------------------------- deprecation
+
+def test_legacy_wrappers_warn_per_entrypoint(served):
+    """Each wrapper raises exactly one DeprecationWarning per call,
+    naming its own entrypoint and pointing at the replacement. (Display
+    dedup to once per call site is the stdlib registry's job; firing on
+    EVERY call is what lets CI's -W error filter catch regressions.)"""
+    _, params, rt, cost, eval_data = served
+    entrypoints = [
+        ("serve_stream", serve_stream, {}),
+        ("serve_stream_batched", serve_stream_batched,
+         {"batch_size": 4}),
+        ("serve_stream_sharded", serve_stream_sharded,
+         {"batch_size": 4, "overlap": False}),
+        ("serve_stream_distributed", serve_stream_distributed,
+         {"batch_size": 4}),
+    ]
+    for name, fn, kw in entrypoints:
+        with warnings.catch_warnings(record=True) as seen:
+            warnings.simplefilter("always")
+            fn(rt, params, OnlineStream(eval_data, seed=0), cost,
+               max_samples=4, **kw)
+        msgs = [str(w.message) for w in seen
+                if issubclass(w.category, DeprecationWarning)
+                and str(w.message).startswith("serve_stream")]
+        assert len(msgs) == 1, (name, msgs)      # one warning per call
+        assert msgs[0].startswith(f"{name}()")   # names its entrypoint
+        assert "ServingConfig" in msgs[0]        # points at the fix
+
+
+def test_legacy_wrappers_warn_on_every_call_under_error_filter(served):
+    """The CI regression guard: with the warning promoted to an error,
+    EVERY legacy call raises — not just the first in the process."""
+    _, params, rt, cost, eval_data = served
+    for _ in range(2):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            with pytest.raises(DeprecationWarning, match="serve_stream"):
+                serve_stream(rt, params, OnlineStream(eval_data, seed=0),
+                             cost, max_samples=2)
+
+
+def test_legacy_wrappers_return_facade_reports(served):
+    """The wrappers delegate to serve(): callers get the typed report."""
+    _, params, rt, cost, eval_data = served
+    out = _legacy(serve_stream_batched, rt, params,
+                  OnlineStream(eval_data, seed=0), cost, batch_size=4,
+                  max_samples=8)
+    assert isinstance(out, ServeReport)
+    assert out.path == "batched"

@@ -44,7 +44,7 @@ def test_param_specs_cover_tree(arch):
     n_sharded = sum(
         1 for (kp, leaf), (_, spec) in zip(flat, flat_s)
         if leaf.ndim >= 2 and any(a is not None for a in spec))
-    assert n_sharded >= len([l for _, l in flat if l.ndim >= 2]) * 0.5
+    assert n_sharded >= len([lf for _, lf in flat if lf.ndim >= 2]) * 0.5
 
 
 def test_sanitize_nondivisible():

@@ -8,7 +8,6 @@ regret.
 """
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -17,7 +16,7 @@ from repro.configs import get_smoke_config
 from repro.core import (CostModel, calibrate_alpha, cumulative_regret,
                         final_exit, run_stream)
 from repro.data import make_dataset
-from repro.data.synthetic import DOMAINS, VOCAB
+from repro.data.synthetic import VOCAB
 from repro.launch.train import exit_accuracy, train_classifier
 
 # full-pipeline training fixture: minutes of CPU — excluded from tier-1
