@@ -1,0 +1,211 @@
+"""Request latency under bursty traffic: the continuous-batching
+scheduler's (batch_size, batch_deadline) trade, measured end to end.
+
+`serve_throughput.py` replays a steady offline stream — every batch is
+full, queueing delay is invisible. Production traffic is bursty: during
+a burst the queue grows (batches fill instantly, requests wait behind
+each other), between bursts a half-full batch waits for traffic that
+isn't coming unless a deadline closes it. This benchmark pins that
+trade: it drives a Poisson + on/off-burst arrival trace through an
+`Engine` with `scheduler="fifo"` for a grid of
+``(batch_size, batch_deadline_ms)`` points and reports p50/p99 request
+latency, shed rate, and throughput per point.
+
+Time is **virtual**: the trace supplies arrival instants, a fake clock
+feeds the scheduler, and each `submit`/`tick` call's real wall time is
+added to the virtual clock as service time — so latency combines real
+compute cost with trace-driven queueing, deterministically orderable
+across points on one host. Between arrivals the driver steps the clock
+to `RequestScheduler.next_fire()` and ticks, exactly as an event-loop
+host would. Requests carry a shed deadline (``--request-deadline-ms``),
+so overload sheds instead of queueing without bound.
+
+Results are printed as CSV lines and written to a
+``BENCH_serve_latency.json`` artifact (schema in benchmarks/README.md).
+
+    PYTHONPATH=src:. python benchmarks/serve_latency.py
+    PYTHONPATH=src:. python benchmarks/serve_latency.py --smoke  # CI, <30s
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import CostModel
+from repro.data import OnlineStream, make_dataset
+from repro.serving import EdgeCloudRuntime, Engine, ServingConfig
+
+from serve_throughput import SEQ_LEN, build
+
+# (batch_size, batch_deadline_ms) sweep: deadline 0 = close on fill only
+POINTS = [(8, 0.0), (8, 5.0), (32, 5.0), (32, 50.0)]
+SMOKE_POINTS = [(8, 0.0), (8, 5.0)]
+
+
+class VirtualClock:
+    """Monotonic fake clock the trace driver advances by hand."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance_to(self, t: float):
+        self.t = max(self.t, t)
+
+
+def bursty_arrivals(n: int, *, base_rate: float, burst_rate: float,
+                    mean_on_s: float, mean_off_s: float,
+                    seed: int = 0) -> np.ndarray:
+    """Arrival instants (seconds) of a Poisson process modulated by an
+    on/off burst envelope: rate ``base_rate`` req/s in quiet periods,
+    ``burst_rate`` during bursts, with exponential on/off durations."""
+    rng = np.random.default_rng(seed)
+    times = np.empty(n)
+    t, in_burst = 0.0, False
+    phase_end = rng.exponential(mean_off_s)
+    for i in range(n):
+        rate = burst_rate if in_burst else base_rate
+        t += rng.exponential(1.0 / rate)
+        while t >= phase_end:             # cross into the next phase(s)
+            in_burst = not in_burst
+            phase_end += rng.exponential(
+                mean_on_s if in_burst else mean_off_s)
+        times[i] = t
+    return times
+
+
+def drive_trace(runtime, params, cost, samples, arrivals, *,
+                batch_size: int, batch_deadline_ms: float,
+                max_queue: int, request_deadline_ms: float):
+    """Replay (sample, arrival) pairs through a scheduled Engine in
+    virtual time; returns (report, wall_seconds)."""
+    clock = VirtualClock()
+    cfgkw = dict(batch_size=batch_size, scheduler="fifo",
+                 max_queue=max_queue, shed_policy="drop_oldest")
+    if batch_deadline_ms:
+        cfgkw["batch_deadline_ms"] = batch_deadline_ms
+    eng = Engine(runtime, params, cost, ServingConfig(**cfgkw),
+                 clock=clock)
+    wall0 = time.perf_counter()
+    for sample, t_arr in zip(samples, arrivals):
+        # between arrivals, fire any deadline the event loop would have:
+        # step the clock to each next_fire instant and tick
+        while True:
+            fire = eng.scheduler.next_fire()
+            if fire is None or fire > t_arr:
+                break
+            clock.advance_to(fire)
+            t0 = time.perf_counter()
+            eng.tick()
+            clock.t += time.perf_counter() - t0       # service time
+        clock.advance_to(t_arr)
+        t0 = time.perf_counter()
+        eng.submit(sample, deadline_ms=request_deadline_ms)
+        clock.t += time.perf_counter() - t0
+    t0 = time.perf_counter()
+    report = eng.close()
+    clock.t += time.perf_counter() - t0
+    return report, time.perf_counter() - wall0
+
+
+def run(samples: int = 2048, layers: int = 4, steps: int = 60,
+        base_rate: float = 2000.0, burst_rate: float = 20000.0,
+        mean_on_s: float = 0.05, mean_off_s: float = 0.1,
+        request_deadline_ms: float = 200.0, max_queue: int = 256,
+        smoke: bool = False, print_csv: bool = True,
+        out_path: str = "BENCH_serve_latency.json"):
+    if smoke:
+        samples, steps = min(samples, 256), min(steps, 20)
+    points = SMOKE_POINTS if smoke else POINTS
+    cfg, params = build(layers, steps)
+    rt = EdgeCloudRuntime(cfg)
+    eval_data = make_dataset("imdb_like", max(2 * samples, 1024), seed=2,
+                             seq_len=SEQ_LEN)
+    cost = CostModel(num_layers=cfg.num_layers, alpha=0.75, offload=3.0)
+    reqs = [s for s, _ in zip(iter(OnlineStream(eval_data, seed=0)),
+                              range(samples))]
+    arrivals = bursty_arrivals(samples, base_rate=base_rate,
+                               burst_rate=burst_rate, mean_on_s=mean_on_s,
+                               mean_off_s=mean_off_s)
+
+    rows = []
+    for b, dl in points:
+        def once(b=b, dl=dl):
+            return drive_trace(rt, params, cost, reqs, arrivals,
+                               batch_size=b, batch_deadline_ms=dl,
+                               max_queue=max_queue,
+                               request_deadline_ms=request_deadline_ms)
+
+        once()                                       # compile warmup
+        report, wall = once()
+        sched = report.scheduler
+        lat = sched["latency_ms"]
+        rows.append({
+            "batch_size": b,
+            "batch_deadline_ms": dl,
+            "served": sched["served"],
+            "shed": sched["shed"],
+            "shed_rate": round(sched["shed"] / sched["submitted"], 4),
+            "p50_ms": round(lat.get("p50", float("nan")), 3),
+            "p99_ms": round(lat.get("p99", float("nan")), 3),
+            "mean_batch_fill": round(sched["mean_batch_fill"], 3),
+            "samples_per_sec": round(sched["served"] / wall, 1),
+        })
+        if print_csv:
+            r = rows[-1]
+            print(f"serve_latency/B={b}/deadline={dl:g}ms,"
+                  f"p50={r['p50_ms']}ms,p99={r['p99_ms']}ms,"
+                  f"shed_rate={r['shed_rate']},"
+                  f"fill={r['mean_batch_fill']},"
+                  f"{r['samples_per_sec']} samples/s")
+
+    if out_path:
+        artifact = {
+            "benchmark": "serve_latency",
+            "config": {
+                "samples": samples, "layers": layers, "steps": steps,
+                "seq_len": SEQ_LEN, "base_rate": base_rate,
+                "burst_rate": burst_rate, "mean_on_s": mean_on_s,
+                "mean_off_s": mean_off_s, "max_queue": max_queue,
+                "shed_policy": "drop_oldest",
+                "request_deadline_ms": request_deadline_ms,
+                "virtual_time": True, "smoke": smoke,
+            },
+            "rows": rows,
+        }
+        with open(out_path, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"wrote {out_path}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=2048)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--base-rate", type=float, default=2000.0,
+                    help="quiet-period arrival rate (req/s)")
+    ap.add_argument("--burst-rate", type=float, default=20000.0,
+                    help="burst arrival rate (req/s)")
+    ap.add_argument("--request-deadline-ms", type=float, default=200.0,
+                    help="per-request shed deadline")
+    ap.add_argument("--max-queue", type=int, default=256)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace + 2 sweep points for CI (<30 s)")
+    ap.add_argument("--out", default="BENCH_serve_latency.json",
+                    help="JSON artifact path ('' disables)")
+    args = ap.parse_args()
+    run(samples=args.samples, layers=args.layers, steps=args.steps,
+        base_rate=args.base_rate, burst_rate=args.burst_rate,
+        request_deadline_ms=args.request_deadline_ms,
+        max_queue=args.max_queue, smoke=args.smoke, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -120,6 +120,19 @@ def add_serving_config_args(ap: argparse.ArgumentParser):
                     help="seconds a host's heartbeat may be stale before "
                          "it is declared dead (config: heartbeat_timeout; "
                          "see docs/SERVING.md for sizing)")
+    ap.add_argument("--scheduler", choices=["none", "fifo"], default=None,
+                    help="continuous-batching request scheduler (config: "
+                         "scheduler; see docs/SERVING.md, 'Request "
+                         "scheduling & SLOs')")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="close partial batches after this wait (config: "
+                         "batch_deadline_ms; 0 = close on fill only)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="request admission cap (config: max_queue; "
+                         "0 = unbounded queue)")
+    ap.add_argument("--shed-policy", choices=["reject", "drop_oldest"],
+                    default=None,
+                    help="queue-full policy (config: shed_policy)")
 
 
 def serving_config_from_args(args) -> ServingConfig:
@@ -152,6 +165,14 @@ def serving_config_from_args(args) -> ServingConfig:
         overrides["distributed"] = True
     if args.heartbeat_timeout is not None:
         overrides["heartbeat_timeout"] = args.heartbeat_timeout
+    if args.scheduler is not None:
+        overrides["scheduler"] = args.scheduler
+    if args.deadline_ms is not None:
+        overrides["batch_deadline_ms"] = args.deadline_ms
+    if args.max_queue is not None:
+        overrides["max_queue"] = args.max_queue
+    if args.shed_policy is not None:
+        overrides["shed_policy"] = args.shed_policy
     return dataclasses.replace(base, **overrides) if overrides else base
 
 
@@ -279,6 +300,14 @@ def main():
           f"cost={out['cost_total']:.0f}λ offload_frac={out['offload_frac']:.2f} "
           f"offloaded={out['offload_bytes']/1e6:.1f}MB "
           f"({out['samples_per_sec']:.0f} samples/s)")
+    if out.scheduler:
+        s, lat = out.scheduler, out.scheduler["latency_ms"]
+        fill = s["mean_batch_fill"]
+        print(f"scheduler: served={s['served']} shed={s['shed']} "
+              f"{dict(s['shed_reasons'])} "
+              f"p50={lat.get('p50', float('nan')):.2f}ms "
+              f"p99={lat.get('p99', float('nan')):.2f}ms "
+              f"fill={fill if fill is None else round(fill, 2)}")
 
     if skip:
         return     # rejoined host 0: partial stream, baselines unmeaning

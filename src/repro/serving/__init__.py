@@ -42,6 +42,10 @@ from repro.serving.distributed import (
     serve_stream_distributed,
     start_worker_heartbeat,
 )
+from repro.serving.scheduler import (
+    Request,
+    RequestScheduler,
+)
 from repro.serving.api import (
     Engine,
     ServeReport,
@@ -59,6 +63,9 @@ __all__ = [
     "EdgeCloudRuntime",
     "OffloadQueue",
     "PendingFlush",
+    # request scheduling (Engine sessions)
+    "Request",
+    "RequestScheduler",
     # cluster plumbing (distributed serving)
     "ClusterReport",
     "CoordinatorExchange",

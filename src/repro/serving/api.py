@@ -32,16 +32,19 @@ once per call site by the stdlib registry, promoted to an error in CI).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import json
 import time
 import warnings
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
 from repro.core.rewards import CostModel
 from repro.serving.batched import _BatchedSession, _serve_stream_batched
 from repro.serving.distributed import _serve_stream_distributed
+from repro.serving.scheduler import (SCHEDULERS, SHED_POLICIES,
+                                     RequestScheduler)
 from repro.serving.sharded import _ShardedSession, _serve_stream_sharded
 from repro.serving.simulator import EdgeCloudRuntime, _serve_stream_sequential
 
@@ -88,6 +91,11 @@ class ServingConfig:
     fault_tolerant: bool = False
     heartbeat_timeout: float = 5.0
     heartbeat_interval: float = 0.25
+    # ---- request scheduling (Engine sessions; see serving/scheduler.py)
+    scheduler: str = "none"           # "fifo" = continuous-batching scheduler
+    max_queue: int = 0                # admission cap; 0 = unbounded queue
+    batch_deadline_ms: float = 0.0    # close partial batches after this wait
+    shed_policy: str = "reject"       # queue-full policy: reject | drop_oldest
     # ---- diagnostics ---------------------------------------------------
     record_trace: bool = False        # per-sample confidences (batched/sharded)
     record_states: bool = False       # per-batch controller snapshots (distributed)
@@ -148,6 +156,35 @@ class ServingConfig:
                 "distributed", True,
                 f"conflicts with path={self.path!r}; use path='auto' or "
                 f"path='distributed'"))
+        if self.scheduler not in SCHEDULERS:
+            raise ValueError(_err("scheduler", self.scheduler,
+                                  f"choose one of {SCHEDULERS}"))
+        if self.shed_policy not in SHED_POLICIES:
+            raise ValueError(_err("shed_policy", self.shed_policy,
+                                  f"choose one of {SHED_POLICIES}"))
+        if self.max_queue < 0:
+            raise ValueError(_err(
+                "max_queue", self.max_queue,
+                "use 0 for an unbounded admission queue, or a positive "
+                "cap to shed under overload"))
+        if self.batch_deadline_ms < 0:
+            raise ValueError(_err(
+                "batch_deadline_ms", self.batch_deadline_ms,
+                "use 0 to close micro-batches on fill only, or a "
+                "positive wait bound (milliseconds)"))
+        if self.scheduler == "none" and (self.max_queue
+                                         or self.batch_deadline_ms):
+            field = "max_queue" if self.max_queue else "batch_deadline_ms"
+            raise ValueError(_err(
+                field, getattr(self, field),
+                "admission control and deadline batch closing are "
+                "request-scheduler features; set scheduler='fifo'"))
+        if self.scheduler != "none" and self.distributed:
+            raise ValueError(_err(
+                "scheduler", self.scheduler,
+                "the request scheduler drives a single-process Engine "
+                "session; distributed clusters must consume a shared "
+                "offline stream (set distributed=False)"))
         if self.fault_tolerant and not self.distributed:
             raise ValueError(_err(
                 "fault_tolerant", True,
@@ -226,9 +263,6 @@ class ServingConfig:
         return cls(**raw)
 
 
-_REPORT_SECTIONS = ("overlap", "state", "trace", "distributed", "states")
-
-
 @dataclasses.dataclass
 class ServeReport:
     """Typed result of one serving run (or `Engine` session).
@@ -259,12 +293,15 @@ class ServeReport:
     trace: Optional[Dict[str, list]] = None        # per-sample confidences
     distributed: Optional[Dict[str, Any]] = None   # cluster section
     states: Optional[List[Dict[str, Any]]] = None  # per-batch snapshots
+    scheduler: Optional[Dict[str, Any]] = None     # request-scheduler stats
 
     @classmethod
     def from_raw(cls, raw: Dict[str, Any], *, path: str, num_layers: int,
                  wall_s: Optional[float] = None) -> "ServeReport":
         """Wrap a serving runtime's raw result dict."""
         arms = np.asarray(raw["arms"])
+        if arms.size == 0:        # empty history: float64 by default,
+            arms = arms.astype(np.int64)   # but arms index bincount
         exited = raw.get("exited")
         exits_per_layer = None
         if exited is not None:
@@ -294,6 +331,7 @@ class ServeReport:
             trace=raw.get("trace"),
             distributed=raw.get("distributed"),
             states=raw.get("states"),
+            scheduler=raw.get("scheduler"),
         )
 
     def to_dict(self) -> Dict[str, Any]:
@@ -377,6 +415,17 @@ def serve(runtime: EdgeCloudRuntime, params, stream, cost: CostModel,
         raise ValueError(
             f"exchange/init_state/stream_offset belong to the "
             f"distributed path; this config resolves to {path!r}")
+    if config.scheduler != "none":
+        # the request scheduler lives behind the Engine session; replay
+        # the offline stream through one. Over a steady trace with no
+        # deadlines this is bit-identical to the unscheduled path (the
+        # scheduler only ever closes full batches), and the report gains
+        # the scheduler section (latency percentiles, shed counts).
+        eng = Engine(runtime, params, cost, config, mesh=mesh)
+        for sample in itertools.islice(iter(stream),
+                                       config.max_samples or None):
+            eng.submit(sample)
+        return eng.close()
     common = dict(side_info=config.side_info, beta=config.beta,
                   max_samples=config.max_samples,
                   labels_for_accounting=config.labels_for_accounting)
@@ -442,10 +491,23 @@ class Engine:
     rejected: every host of a cluster must consume the same logical
     stream, which push traffic into one process cannot guarantee — run
     `serve()` with a distributed config on each host instead.
+
+    With ``config.scheduler="fifo"`` submits are routed through a
+    `RequestScheduler` (serving/scheduler.py) instead of the plain
+    accumulate-and-push buffer: requests carry priorities and shed
+    deadlines (``submit(samples, priority=, deadline_ms=)``), a bounded
+    queue sheds under overload (``max_queue`` / ``shed_policy``), and
+    partial micro-batches close once the oldest request has waited
+    ``batch_deadline_ms`` — driven by `tick()`, which time-based hosts
+    call between arrivals. The report gains a ``scheduler`` section
+    (p50/p99 latency, shed counts by reason, batch fill). ``clock``
+    injects a monotonic time source for the scheduler (tests pin
+    deadline behavior with a fake clock).
     """
 
     def __init__(self, runtime: EdgeCloudRuntime, params, cost: CostModel,
-                 config: Optional[ServingConfig] = None, *, mesh=None):
+                 config: Optional[ServingConfig] = None, *, mesh=None,
+                 clock: Optional[Callable[[], float]] = None):
         self.config = config if config is not None else ServingConfig()
         self.cost = cost
         path = self.config.resolved_path()
@@ -476,9 +538,17 @@ class Engine:
                 side_info=c.side_info, beta=c.beta,
                 labels_for_accounting=c.labels_for_accounting,
                 record_trace=c.record_trace)
+        self._clock = clock if clock is not None else time.monotonic
+        self._sched: Optional[RequestScheduler] = None
+        if c.scheduler != "none":
+            self._sched = RequestScheduler(
+                batch_size=c.batch_size, max_queue=c.max_queue,
+                batch_deadline_ms=c.batch_deadline_ms,
+                shed_policy=c.shed_policy, clock=self._clock)
         self._buf: List[Dict[str, Any]] = []
-        self._submitted = 0
-        self._dropped = 0
+        self._offered = 0      # samples consumed from submit() arguments
+        self._accepted = 0     # samples admitted toward the cap
+        self._dropped = 0      # samples rejected by the cap
         self._closed = False
         self._t0 = time.perf_counter()
         self._final: Optional[ServeReport] = None
@@ -491,7 +561,16 @@ class Engine:
     @property
     def pending(self) -> int:
         """Samples submitted but not yet pushed through a micro-batch."""
+        if self._sched is not None:
+            return self._sched.pending
         return len(self._buf)
+
+    @property
+    def submitted(self) -> int:
+        """Every sample this session consumed from `submit` arguments —
+        the conservation total: ``submitted == report.n + pending +
+        shed + dropped`` at all times."""
+        return self._offered
 
     @property
     def dropped(self) -> int:
@@ -499,43 +578,107 @@ class Engine:
         already reached when they were submitted."""
         return self._dropped
 
+    @property
+    def shed(self) -> int:
+        """Requests shed by the scheduler (queue-full rejections,
+        drop_oldest evictions, expired shed deadlines); 0 without a
+        scheduler config."""
+        return self._sched.shed if self._sched is not None else 0
+
+    @property
+    def scheduler(self) -> Optional[RequestScheduler]:
+        """The session's `RequestScheduler` (None without one) — for
+        event-loop hosts that schedule `tick()` via ``next_fire()``."""
+        return self._sched
+
     # --------------------------------------------------------- lifecycle
-    def submit(self, samples) -> int:
+    def submit(self, samples, *, priority: int = 0,
+               deadline_ms: Optional[float] = None) -> int:
         """Push samples into the session; returns how many were accepted.
 
         ``samples`` is one sample dict or an iterable of them. Full
         micro-batches are served immediately; a ragged remainder waits
         for more traffic (or `drain`). Once the config's ``max_samples``
-        cap is reached, submit stops consuming the iterable (so an
+        cap is reached, submit stops consuming a lazy iterable (so an
         unbounded source returns promptly, mirroring how the one-shot
-        facade stops pulling its stream at the cap); the one sample
-        consumed to detect the cap — and any sample submitted after it —
-        is rejected and counted in `Engine.dropped`.
+        facade stops pulling its stream at the cap); every rejected
+        sample of a sized sequence — and, for a lazy iterable, the one
+        sample consumed to detect the cap — is counted in
+        `Engine.dropped`.
+
+        ``priority`` and ``deadline_ms`` are per-request scheduling
+        metadata (higher priority serves sooner; ``deadline_ms`` is the
+        shed deadline relative to arrival) and require a scheduler
+        config; scheduler admission may shed instead of accepting (see
+        `Engine.shed`).
         """
         if self._closed:
             raise RuntimeError("Engine is closed; create a new session")
+        if self._sched is None and (priority != 0
+                                    or deadline_ms is not None):
+            raise ValueError(
+                "priority/deadline_ms are request-scheduler metadata; "
+                "set ServingConfig(scheduler='fifo')")
         if isinstance(samples, dict):
             samples = [samples]
+        sized = isinstance(samples, (list, tuple))
         cap = self.config.max_samples
         accepted = 0
-        for s in samples:
-            if cap and self._submitted >= cap:
-                self._dropped += 1
+        for i, s in enumerate(samples):
+            if cap and self._accepted >= cap:
+                rejected = len(samples) - i if sized else 1
+                self._offered += rejected
+                self._dropped += rejected
                 break
-            self._buf.append(s)
-            self._submitted += 1
-            accepted += 1
-            if len(self._buf) >= self.config.batch_size:
-                self._sess.push(self._buf)
-                self._buf = []
+            self._offered += 1
+            if self._sched is not None:
+                if self._sched.offer(s, priority=priority,
+                                     deadline_ms=deadline_ms):
+                    self._accepted += 1
+                    accepted += 1
+            else:
+                self._buf.append(s)
+                self._accepted += 1
+                accepted += 1
+                if len(self._buf) >= self.config.batch_size:
+                    self._sess.push(self._buf)
+                    self._buf = []
+        if self._sched is not None:
+            self._pump()
         return accepted
+
+    def tick(self) -> int:
+        """Let the scheduler act on the passage of time: shed expired
+        requests and close any partial micro-batch whose oldest request
+        has waited ``batch_deadline_ms``. Returns the number of samples
+        served by this tick (0 without a scheduler config — time never
+        changes the plain accumulate-and-push schedule)."""
+        if self._closed:
+            raise RuntimeError("Engine is closed; create a new session")
+        if self._sched is None:
+            return 0
+        return self._pump()
+
+    def _pump(self) -> int:
+        served = 0
+        for reqs in self._sched.poll():
+            self._sess.push([r.sample for r in reqs])
+            self._sched.complete(reqs)
+            served += len(reqs)
+        return served
 
     def drain(self) -> ServeReport:
         """Serve everything submitted so far (including a ragged tail),
-        resolve all in-flight cloud flushes, and report."""
+        resolve all in-flight cloud flushes, and report. With a
+        scheduler, expired requests are shed — never served — and the
+        rest goes out in priority order."""
         if self._closed:
             raise RuntimeError("Engine is closed; create a new session")
-        if self._buf:
+        if self._sched is not None:
+            for reqs in self._sched.flush():
+                self._sess.push([r.sample for r in reqs])
+                self._sched.complete(reqs)
+        elif self._buf:
             self._sess.push(self._buf)
             self._buf = []
         self._sess.drain()
@@ -559,8 +702,14 @@ class Engine:
         return False
 
     def _report(self) -> ServeReport:
+        raw = self._sess.result()
+        if self._sched is not None:
+            # engine-level cap drops ride along so the section alone
+            # closes the conservation ledger
+            raw["scheduler"] = {**self._sched.snapshot(),
+                                "dropped": self._dropped}
         return ServeReport.from_raw(
-            self._sess.result(), path=self._path,
+            raw, path=self._path,
             num_layers=self.cost.num_layers,
             wall_s=time.perf_counter() - self._t0)
 

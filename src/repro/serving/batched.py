@@ -263,10 +263,16 @@ class _BatchedSession:
         self.trace: Optional[Dict[str, list]] = (
             {"conf_path": [], "conf_L": []} if record_trace else None)
         self.n = 0
+        self.batch_sizes: List[int] = []   # fill levels of pushed batches
 
     def push(self, batch):
-        """Serve one micro-batch (any size >= 1; ragged tails included)."""
+        """Serve one micro-batch (any size >= 1; ragged tails included).
+        An empty push is a no-op — a scheduler tick or drain that formed
+        nothing must not spend a bandit round."""
+        if not batch:
+            return
         B = len(batch)
+        self.batch_sizes.append(B)
         arms = self.ctl.choose_splits(B)
         tokens = np.stack([np.asarray(s["tokens"]) for s in batch])
         seq_len = tokens.shape[1]

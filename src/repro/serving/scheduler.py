@@ -1,0 +1,278 @@
+"""Slot-based continuous-batching request scheduler.
+
+The `Engine` push-session (api.py) is a thin incremental driver: it
+buffers submitted samples and pushes a micro-batch the instant
+``batch_size`` of them accumulate. That is the right schedule for a
+steady offline replay, but production traffic is bursty, per-request,
+and SLO-bound — requests arrive with different urgencies, queues grow
+without bound under overload, and a half-full batch should not wait
+forever for traffic that may never come.
+
+This module adds the missing scheduling layer between ``submit`` and
+the session push, extending SplitEE's accuracy-vs-cost trade to
+*latency*:
+
+* **Requests, not samples** — every submitted sample becomes a
+  `Request` carrying its arrival timestamp, an optional *shed deadline*
+  (``deadline_ms`` after arrival), and a priority. Service order is
+  priority-major (higher first), FIFO within a priority.
+* **Admission control & load shedding** — with ``max_queue`` set, a
+  full queue sheds: ``shed_policy="reject"`` refuses the newcomer,
+  ``"drop_oldest"`` evicts the oldest request of the lowest queued
+  priority to admit a more important newcomer. A request whose shed
+  deadline has passed while it queued is shed at batch-formation time —
+  **no request is ever handed to the session past its deadline**.
+* **Fill-or-deadline batch closing** — a micro-batch closes when it
+  fills (padding-optimal) OR when the oldest waiting request has queued
+  for ``batch_deadline_ms`` (latency-optimal): the knob that trades
+  padding waste against queueing delay. ``batch_deadline_ms=0`` closes
+  on fill only (plus the final `flush`), which is exactly the plain
+  `Engine` schedule — a single-priority, no-deadline scheduler over a
+  steady trace is therefore **bit-identical** to the unscheduled path
+  (the differential rung pinned by tests/test_scheduler.py).
+* **Per-request latency** — completion is stamped when the request's
+  batch has been pushed through the session; `snapshot()` reports
+  p50/p99/mean/max latency, shed counts by reason, and mean batch fill.
+
+Time comes from an injectable ``clock`` (monotonic seconds). Tests pin
+deadline behavior with a fake clock; `benchmarks/serve_latency.py`
+drives bursty virtual-time arrival traces through it.
+
+Invariants (property-tested under the vendored hypothesis fallback):
+conservation ``submitted == served + shed + pending``, FIFO within
+priority, no served request past its shed deadline, and batch size <=
+the configured cap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+SCHEDULERS = ("none", "fifo")
+SHED_POLICIES = ("reject", "drop_oldest")
+
+# shed reasons (keys of the snapshot's ``shed_reasons`` histogram)
+SHED_QUEUE_FULL = "queue_full"   # admission refused: queue at max_queue
+SHED_EVICTED = "evicted"         # evicted by drop_oldest to admit another
+SHED_DEADLINE = "deadline"       # shed deadline passed while queued
+
+
+@dataclasses.dataclass
+class Request:
+    """One queued unit of work: a sample plus its scheduling metadata."""
+
+    sample: Dict[str, Any]
+    arrival: float                     # clock seconds at admission
+    seq: int                           # admission order (FIFO tiebreak)
+    priority: int = 0                  # higher = served sooner
+    deadline: Optional[float] = None   # absolute clock seconds; None = never
+
+    def expired(self, now: float) -> bool:
+        return self.deadline is not None and now > self.deadline
+
+
+def _latency_percentiles(lat_ms: List[float]) -> Dict[str, float]:
+    if not lat_ms:
+        return {"count": 0}
+    arr = np.asarray(lat_ms)
+    return {
+        "count": int(arr.size),
+        "p50": float(np.percentile(arr, 50)),
+        "p99": float(np.percentile(arr, 99)),
+        "mean": float(arr.mean()),
+        "max": float(arr.max()),
+    }
+
+
+class RequestScheduler:
+    """Priority/FIFO request queue with admission control and
+    fill-or-deadline batch formation.
+
+    Pure host-side data structure — no runtime, no JAX — so the
+    invariant suite runs on it directly. The `Engine` owns one and
+    drives it: ``offer`` at submit, ``poll`` after every submit and on
+    `Engine.tick()`, ``flush`` at drain, ``complete`` once a formed
+    batch has been pushed through the serving session.
+    """
+
+    def __init__(self, *, batch_size: int, max_queue: int = 0,
+                 batch_deadline_ms: float = 0.0,
+                 shed_policy: str = "reject",
+                 clock: Optional[Callable[[], float]] = None):
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        if max_queue < 0:
+            raise ValueError(f"max_queue must be >= 0, got {max_queue}")
+        if batch_deadline_ms < 0:
+            raise ValueError(
+                f"batch_deadline_ms must be >= 0, got {batch_deadline_ms}")
+        if shed_policy not in SHED_POLICIES:
+            raise ValueError(f"shed_policy must be one of {SHED_POLICIES}, "
+                             f"got {shed_policy!r}")
+        self.batch_size = batch_size
+        self.max_queue = max_queue
+        self.batch_deadline_ms = batch_deadline_ms
+        self.shed_policy = shed_policy
+        self.clock = clock if clock is not None else time.monotonic
+        self._queue: List[Request] = []
+        self._seq = 0
+        # conservation counters: submitted == served + shed + pending
+        self.submitted = 0
+        self.served = 0
+        self.shed = 0
+        self.shed_reasons: Dict[str, int] = {
+            SHED_QUEUE_FULL: 0, SHED_EVICTED: 0, SHED_DEADLINE: 0}
+        self.batches = 0
+        self._batch_rows = 0            # sum of formed batch sizes
+        self._latency_ms: List[float] = []
+
+    # ------------------------------------------------------------- state
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def _now(self, now: Optional[float]) -> float:
+        return self.clock() if now is None else now
+
+    def _shed_one(self, req: Request, reason: str):
+        self.shed += 1
+        self.shed_reasons[reason] += 1
+
+    # --------------------------------------------------------- admission
+    def offer(self, sample: Dict[str, Any], *, priority: int = 0,
+              deadline_ms: Optional[float] = None,
+              now: Optional[float] = None) -> bool:
+        """Admit one sample as a `Request`; returns False if it was shed.
+
+        ``deadline_ms`` is the request's *shed deadline*, relative to
+        arrival: once that long in the queue it will be shed, never
+        served. Admission control runs first: with the queue at
+        ``max_queue``, ``reject`` sheds the newcomer while
+        ``drop_oldest`` evicts the oldest request of the lowest queued
+        priority — unless the newcomer itself is lower-priority than
+        everything queued, in which case rejecting it IS drop-lowest.
+        """
+        now = self._now(now)
+        self.submitted += 1
+        req = Request(
+            sample=sample, arrival=now, seq=self._seq, priority=priority,
+            deadline=(now + deadline_ms / 1000.0
+                      if deadline_ms is not None else None))
+        self._seq += 1
+        if self.max_queue and len(self._queue) >= self.max_queue:
+            if self.shed_policy == "reject":
+                self._shed_one(req, SHED_QUEUE_FULL)
+                return False
+            victim = min(self._queue, key=lambda r: (r.priority, r.seq))
+            if victim.priority >= req.priority:
+                # newcomer is the least important request in sight
+                self._shed_one(req, SHED_QUEUE_FULL)
+                return False
+            self._queue.remove(victim)
+            self._shed_one(victim, SHED_EVICTED)
+        self._queue.append(req)
+        return True
+
+    # --------------------------------------------------- batch formation
+    def _prune_expired(self, now: float):
+        """Shed every queued request whose shed deadline has passed."""
+        live = []
+        for r in self._queue:
+            if r.expired(now):
+                self._shed_one(r, SHED_DEADLINE)
+            else:
+                live.append(r)
+        self._queue = live
+
+    def _take(self, k: int) -> List[Request]:
+        """Pop the k most urgent live requests: priority-major (higher
+        first), FIFO (admission order) within a priority."""
+        self._queue.sort(key=lambda r: (-r.priority, r.seq))
+        batch, self._queue = self._queue[:k], self._queue[k:]
+        self.batches += 1
+        self._batch_rows += len(batch)
+        return batch
+
+    def _deadline_due(self, now: float) -> bool:
+        if not self._queue or not self.batch_deadline_ms:
+            return False
+        oldest = min(r.arrival for r in self._queue)
+        return (now - oldest) * 1000.0 >= self.batch_deadline_ms
+
+    def poll(self, now: Optional[float] = None) -> List[List[Request]]:
+        """Form every micro-batch that is ready at ``now``.
+
+        A batch closes on *fill* (>= batch_size live requests queued) or
+        on *deadline* (the oldest waiting request has queued for
+        ``batch_deadline_ms`` — the partial batch goes out, trading
+        padding waste for bounded queueing delay). Expired requests are
+        shed before every formation, so no returned request is past its
+        shed deadline at formation time.
+        """
+        now = self._now(now)
+        batches = []
+        while True:
+            self._prune_expired(now)
+            if len(self._queue) >= self.batch_size:
+                batches.append(self._take(self.batch_size))
+            elif self._deadline_due(now):
+                batches.append(self._take(len(self._queue)))
+            else:
+                return batches
+
+    def flush(self, now: Optional[float] = None) -> List[List[Request]]:
+        """Drain-time formation: shed the expired, then emit everything
+        still queued as batches of <= batch_size (priority order)."""
+        now = self._now(now)
+        self._prune_expired(now)
+        batches = []
+        while self._queue:
+            batches.append(self._take(min(self.batch_size,
+                                          len(self._queue))))
+        return batches
+
+    def next_fire(self, now: Optional[float] = None) -> Optional[float]:
+        """Earliest clock time at which waiting changes the schedule: the
+        pending batch-deadline close or the next shed deadline, whichever
+        is sooner (None when nothing is queued or nothing is timed).
+        Event-loop drivers (benchmarks/serve_latency.py) sleep-or-step
+        to this instant instead of polling."""
+        del now
+        times = []
+        if self._queue and self.batch_deadline_ms:
+            oldest = min(r.arrival for r in self._queue)
+            times.append(oldest + self.batch_deadline_ms / 1000.0)
+        times.extend(r.deadline for r in self._queue
+                     if r.deadline is not None)
+        return min(times) if times else None
+
+    # --------------------------------------------------------- accounting
+    def complete(self, batch: List[Request],
+                 now: Optional[float] = None):
+        """Record a formed batch as served (its session push returned);
+        per-request latency is completion minus arrival."""
+        now = self._now(now)
+        self.served += len(batch)
+        self._latency_ms.extend((now - r.arrival) * 1000.0 for r in batch)
+
+    def snapshot(self) -> Dict[str, Any]:
+        """The report's ``scheduler`` section."""
+        return {
+            "policy": "fifo",
+            "shed_policy": self.shed_policy,
+            "max_queue": self.max_queue,
+            "batch_deadline_ms": self.batch_deadline_ms,
+            "submitted": self.submitted,
+            "served": self.served,
+            "shed": self.shed,
+            "shed_reasons": dict(self.shed_reasons),
+            "pending": len(self._queue),
+            "batches": self.batches,
+            "mean_batch_fill": (self._batch_rows
+                                / (self.batches * self.batch_size)
+                                if self.batches else None),
+            "latency_ms": _latency_percentiles(self._latency_ms),
+        }

@@ -271,6 +271,7 @@ class _ShardedSession:
             {"conf_path": [], "conf_L": []} if record_trace else None)
         self.n = 0
         self.overlapped = 0
+        self.batch_sizes: List[int] = []   # fill levels of pushed batches
         self._driver = _PipelineDriver(
             batch_size=batch_size, overlap=overlap,
             overlap_depth=overlap_depth,
@@ -327,7 +328,12 @@ class _ShardedSession:
         self.n += B
 
     def push(self, batch):
-        """Serve one micro-batch (any size >= 1; ragged tails included)."""
+        """Serve one micro-batch (any size >= 1; ragged tails included).
+        An empty push is a no-op — a scheduler tick or drain that formed
+        nothing must not spend a bandit round."""
+        if not batch:
+            return
+        self.batch_sizes.append(len(batch))
         self._driver.push(batch)
 
     def drain(self):

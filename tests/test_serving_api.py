@@ -66,6 +66,14 @@ def served():
     (dict(record_trace=True, path="sequential"), "record_trace"),
     (dict(record_trace=True, distributed=True), "record_trace"),
     (dict(distributed=True, path="batched"), "distributed"),
+    (dict(scheduler="bogus"), "scheduler"),
+    (dict(shed_policy="bogus"), "shed_policy"),
+    (dict(max_queue=-1), "max_queue"),
+    (dict(batch_deadline_ms=-0.5), "batch_deadline_ms"),
+    (dict(max_queue=8), "max_queue"),                 # needs scheduler
+    (dict(batch_deadline_ms=5.0), "batch_deadline_ms"),
+    (dict(scheduler="fifo", distributed=True), "scheduler"),
+    (dict(scheduler="fifo", path="distributed"), "scheduler"),
     (dict(mesh=True, path="batched"), "mesh"),
     (dict(replicas=2, path="batched"), "replicas"),
     (dict(batch_size=4, path="sequential"), "batch_size"),
@@ -95,6 +103,10 @@ def test_config_json_roundtrip():
                         beta=0.7, max_samples=128,
                         labels_for_accounting=False)
     assert ServingConfig.from_json(cfg.to_json()) == cfg
+    # scheduler fields round-trip too
+    s = ServingConfig(batch_size=8, scheduler="fifo", max_queue=64,
+                      batch_deadline_ms=12.5, shed_policy="drop_oldest")
+    assert ServingConfig.from_json(s.to_json()) == s
     # distributed normalization survives the round trip
     d = ServingConfig(path="distributed", fault_tolerant=True,
                       heartbeat_timeout=2.5)
@@ -313,6 +325,88 @@ def test_engine_lifecycle(served):
         eng.submit(samples[:1])
     with pytest.raises(RuntimeError, match="closed"):
         eng.drain()
+
+
+def test_engine_dropped_counts_every_rejected_sample(served):
+    """Regression: a multi-sample list submitted past the cap counts
+    EVERY rejected sample in `dropped`, not just the probe (a lazy
+    iterable still stops being consumed after one probe)."""
+    _, params, rt, cost, eval_data = served
+    samples = list(itertools.islice(iter(OnlineStream(eval_data, seed=0)),
+                                    30))
+    eng = Engine(rt, params, cost, ServingConfig(batch_size=4,
+                                                 max_samples=16))
+    assert eng.submit(samples) == 16
+    assert eng.dropped == 14                  # all 14 rejects counted
+    assert eng.submitted == 30
+    assert eng.close().n == 16
+    # split across calls: the second list is rejected wholesale
+    eng2 = Engine(rt, params, cost, ServingConfig(batch_size=4,
+                                                  max_samples=16))
+    assert eng2.submit(samples[:16]) == 16
+    assert eng2.submit(samples[16:]) == 0
+    assert eng2.dropped == 14
+    # lazy iterable past the cap: one probe consumed, one drop counted
+    it = iter(samples)
+    assert eng2.submit(it) == 0
+    assert eng2.dropped == 15
+    assert len(list(it)) == 29                # rest of the source intact
+    eng2.close()
+
+
+def test_engine_drain_on_empty_session(served):
+    """Draining before any submit is legal: an empty, zero-count report."""
+    _, params, rt, cost, _ = served
+    eng = Engine(rt, params, cost, ServingConfig(batch_size=4))
+    rep = eng.drain()
+    assert rep.n == 0 and len(rep.preds) == 0
+    assert rep.accuracy is None
+    assert int(rep.exits_per_layer.sum()) == 0
+    assert eng.close().n == 0
+
+
+def test_engine_reports_monotonic_across_drains(served):
+    """drain → submit → drain: counts only grow, and the earlier
+    report's samples are a prefix of the later one's."""
+    _, params, rt, cost, eval_data = served
+    samples = list(itertools.islice(iter(OnlineStream(eval_data, seed=0)),
+                                    17))
+    eng = Engine(rt, params, cost, ServingConfig(batch_size=4))
+    eng.submit(samples[:10])
+    first = eng.drain()
+    assert first.n == 10
+    eng.submit(samples[10:])
+    second = eng.drain()
+    assert second.n == 17
+    assert second.cost_total >= first.cost_total
+    np.testing.assert_array_equal(second.preds[:10], first.preds)
+    np.testing.assert_array_equal(second.arms[:10], first.arms)
+    eng.close()
+
+
+def test_engine_double_close_returns_identical_report_object(served):
+    _, params, rt, cost, eval_data = served
+    eng = Engine(rt, params, cost, ServingConfig(batch_size=4))
+    eng.submit(list(itertools.islice(iter(OnlineStream(eval_data, seed=0)),
+                                     6)))
+    final = eng.close()
+    assert eng.close() is final               # the very same object
+    assert eng.close() is eng.close()
+
+
+def test_engine_context_exit_on_exception_leaves_unclosed(served):
+    """The documented `__exit__` contract: an exception propagates and
+    the session stays open — the caller decides whether the partial
+    session is still worth draining."""
+    _, params, rt, cost, eval_data = served
+    with pytest.raises(RuntimeError, match="boom"):
+        with Engine(rt, params, cost, ServingConfig(batch_size=4)) as eng:
+            eng.submit(list(itertools.islice(
+                iter(OnlineStream(eval_data, seed=0)), 9)))
+            raise RuntimeError("boom")
+    assert not eng.closed                     # un-closed, by design
+    assert eng.pending == 1                   # ragged tail still queued
+    assert eng.close().n == 9                 # and still drainable
 
 
 def test_engine_rejects_distributed(served):

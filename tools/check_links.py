@@ -1,20 +1,54 @@
 """Check that relative markdown links in the repo's docs resolve.
 
 Scans README.md, ROADMAP.md, docs/*.md and benchmarks/README.md for
-inline links/images `[...](target)` and verifies every relative target
-exists (anchors and external URLs are skipped; anchors-only links too).
-Exits non-zero listing every dangling link — run by the CI lint job so
-doc cross-references can't rot.
+inline links/images `[...](target)` and verifies that every relative
+target exists AND that any `#fragment` — intra-page or cross-file —
+matches a real heading of the target document (GitHub-style heading
+slugs, duplicate-heading `-1`/`-2` suffixes included). External URLs
+are skipped. Exits non-zero listing every dangling link — run by the
+CI lint job so doc cross-references can't rot.
 
     python tools/check_links.py
 """
 from __future__ import annotations
 
+import functools
 import pathlib
 import re
 import sys
 
 LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+FENCE_RE = re.compile(r"^\s*(```|~~~)")
+# chars GitHub keeps in a heading slug (besides spaces -> hyphens)
+SLUG_KEEP_RE = re.compile(r"[^\w\- ]")
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor for a heading: lowercase, punctuation stripped,
+    spaces to hyphens (markdown emphasis/code markers contribute
+    nothing, so stripping them as punctuation matches)."""
+    return SLUG_KEEP_RE.sub("", heading.strip().lower()).replace(" ", "-")
+
+
+@functools.lru_cache(maxsize=None)
+def anchors(path: pathlib.Path) -> frozenset:
+    """All heading anchors of a markdown file, with GitHub's -N
+    dedup suffixes for repeated headings."""
+    seen, out = {}, set()
+    in_fence = False
+    for line in path.read_text().splitlines():
+        if FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        m = None if in_fence else HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = slugify(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return frozenset(out)
 
 
 def doc_files(root: pathlib.Path):
@@ -30,13 +64,19 @@ def check(root: pathlib.Path):
             for target in LINK_RE.findall(line):
                 if target.startswith(("http://", "https://", "mailto:")):
                     continue
-                if target.startswith("#"):        # intra-page anchor
-                    continue
-                path = (md.parent / target.split("#", 1)[0]).resolve()
+                rel, _, fragment = target.partition("#")
+                path = (md.parent / rel).resolve() if rel else md
                 if not path.exists():
                     errors.append(
                         f"{md.relative_to(root)}:{lineno}: dangling link "
                         f"-> {target}")
+                    continue
+                if fragment and path.suffix == ".md" \
+                        and fragment not in anchors(path):
+                    errors.append(
+                        f"{md.relative_to(root)}:{lineno}: dangling "
+                        f"anchor -> {target} (no heading "
+                        f"'#{fragment}' in {path.name})")
     return errors
 
 
@@ -47,7 +87,7 @@ def main():
         print("\n".join(errors))
         sys.exit(1)
     n = len(list(doc_files(root)))
-    print(f"doc links OK ({n} files checked)")
+    print(f"doc links OK ({n} files checked, anchors validated)")
 
 
 if __name__ == "__main__":
