@@ -1,0 +1,187 @@
+"""Edge-phase strategy benchmark: bucketed launches vs masked scan.
+
+Two sections, both on the same checkpoint and stream:
+
+1. **End-to-end**: `serve()` at B=32 with ``edge_mode`` "bucketed" vs
+   "scan" on fresh runtimes — samples/sec plus how many edge programs
+   each mode compiled over the whole run (the scan mode's pitch is ONE
+   program per batch shape, however many distinct split depths the
+   bandit draws).
+2. **Depth-mix microbench**: the two edge-phase implementations called
+   directly on a fixed B=32 batch whose forced arms span k distinct
+   depths, k in {1, 2, 4} — per-batch wall time and launches/compiles
+   per mode. This isolates the crossover: bucketed pays one launch per
+   distinct depth but each launch runs only `depth` layers; the scan
+   always runs all L layers once, so it wins on dispatch-bound mixes
+   with many distinct depths and loses on narrow shallow mixes.
+
+Results are printed as CSV lines and written to a
+``BENCH_serve_scan.json`` artifact (schema in benchmarks/README.md).
+
+    PYTHONPATH=src:. python benchmarks/serve_scan.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import CostModel
+from repro.data import OnlineStream, make_dataset
+from repro.data.synthetic import VOCAB
+from repro.launch.train import train_classifier
+from repro.serving import EdgeCloudRuntime, ServingConfig, serve
+from repro.serving.batched import OffloadQueue, _edge_phase
+from repro.serving.scan_edge import _edge_phase_scan
+
+SEQ_LEN = 32
+BATCH = 32
+DEPTH_MIXES = [1, 2, 4]           # distinct split depths per micro-batch
+
+
+def build(layers: int, steps: int, seed: int = 0):
+    base = get_smoke_config("elasticbert12")
+    cfg = dataclasses.replace(
+        base, num_layers=layers, d_model=32, num_heads=2, num_kv_heads=2,
+        d_ff=128, vocab_size=VOCAB, num_classes=2, dtype="float32")
+    train = make_dataset("sst2_like", 2048, seed=seed, seq_len=SEQ_LEN)
+    params, _, _ = train_classifier(cfg, train, steps=steps, batch_size=64,
+                                    seed=seed)
+    return cfg, params
+
+
+def _cache_size(jitted):
+    """Compiled-program count for a jitted fn (None if jax hides it)."""
+    try:
+        return int(jitted._cache_size())
+    except AttributeError:
+        return None
+
+
+def _edge_compilations(rt, edge_mode):
+    fn = rt.edge_scan_fn if edge_mode == "scan" else rt.edge_fn
+    return _cache_size(fn)
+
+
+def run_end_to_end(cfg, params, cost, eval_data, samples):
+    rows = []
+    base_sps = None
+    for edge_mode in ("bucketed", "scan"):
+        # fresh runtime per mode so the compile count is this mode's own
+        rt = EdgeCloudRuntime(cfg)
+        scfg = ServingConfig(path="batched", batch_size=BATCH,
+                             edge_mode=edge_mode, max_samples=samples)
+
+        def go():
+            return serve(rt, params, OnlineStream(eval_data, seed=0),
+                         cost, scfg)
+
+        go()                                   # warmup: compile everything
+        t0 = time.time()
+        out = go()
+        dt = time.time() - t0
+        sps = out["n"] / dt
+        if base_sps is None:
+            base_sps = sps
+        rows.append({"edge_mode": edge_mode, "batch_size": BATCH,
+                     "samples_per_sec": round(sps, 2),
+                     "speedup_vs_bucketed": round(sps / base_sps, 3),
+                     "edge_compilations": _edge_compilations(rt, edge_mode)})
+    return rows
+
+
+def run_depth_mix(cfg, params, cost, eval_data, reps):
+    tokens = np.asarray(eval_data["tokens"][:BATCH])
+    rng = np.random.default_rng(0)
+    rows = []
+    for k in DEPTH_MIXES:
+        # k distinct depths, uneven sizes (like real bandit output)
+        pool = np.linspace(0, cfg.num_layers - 1, k).astype(np.int32)
+        arms = pool[rng.integers(0, k, BATCH)]
+        arms[:k] = pool                        # every depth present
+        for edge_mode, phase in (("bucketed", _edge_phase),
+                                 ("scan", _edge_phase_scan)):
+            rt = EdgeCloudRuntime(cfg)
+
+            def go():
+                q = OffloadQueue(rt, params)
+                phase(rt, params, tokens, arms, cost, q,
+                      side_info=False)
+
+            go()                               # warmup/compile
+            t0 = time.time()
+            for _ in range(reps):
+                go()
+            dt = (time.time() - t0) / reps
+            rows.append({"edge_mode": edge_mode, "distinct_depths": k,
+                         "batch_size": BATCH,
+                         "ms_per_batch": round(1e3 * dt, 3),
+                         "edge_launches_per_batch":
+                             1 if edge_mode == "scan" else k,
+                         "edge_compilations":
+                             _edge_compilations(rt, edge_mode)})
+    return rows
+
+
+def run(samples: int = 512, layers: int = 4, steps: int = 60,
+        reps: int = 30, print_csv: bool = True,
+        out_path: str = "BENCH_serve_scan.json"):
+    cfg, params = build(layers, steps)
+    eval_data = make_dataset("imdb_like", max(2 * samples, 256), seed=2,
+                             seq_len=SEQ_LEN)
+    cost = CostModel(num_layers=cfg.num_layers, alpha=0.75, offload=3.0)
+
+    e2e = run_end_to_end(cfg, params, cost, eval_data, samples)
+    mix = run_depth_mix(cfg, params, cost, eval_data, reps)
+
+    if print_csv:
+        for r in e2e:
+            print(f"serve_scan/e2e/{r['edge_mode']}/B={r['batch_size']},"
+                  f"{r['samples_per_sec']:.1f} samples/s,"
+                  f"speedup={r['speedup_vs_bucketed']:.2f}x,"
+                  f"compiles={r['edge_compilations']}")
+        for r in mix:
+            print(f"serve_scan/mix/{r['edge_mode']}/"
+                  f"k={r['distinct_depths']},"
+                  f"{r['ms_per_batch']:.3f} ms/batch,"
+                  f"launches={r['edge_launches_per_batch']},"
+                  f"compiles={r['edge_compilations']}")
+    if out_path:
+        artifact = {
+            "benchmark": "serve_scan",
+            "config": {"samples": samples, "layers": layers,
+                       "steps": steps, "seq_len": SEQ_LEN,
+                       "batch_size": BATCH, "depth_mixes": DEPTH_MIXES,
+                       "reps": reps},
+            "end_to_end": e2e,
+            "depth_mix": mix,
+        }
+        with open(out_path, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"wrote {out_path}")
+    return e2e, mix
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--reps", type=int, default=30)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run for CI: few samples/steps/reps")
+    ap.add_argument("--out", default="BENCH_serve_scan.json",
+                    help="JSON artifact path ('' disables)")
+    args = ap.parse_args()
+    if args.smoke:
+        args.samples, args.steps, args.reps = 96, 5, 3
+    run(samples=args.samples, layers=args.layers, steps=args.steps,
+        reps=args.reps, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

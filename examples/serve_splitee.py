@@ -56,6 +56,12 @@ def main():
     ap.add_argument("--batch-size", type=int, default=1,
                     help=">1 serves micro-batches through the "
                          "delayed-feedback batched runtime")
+    ap.add_argument("--edge-mode", choices=["bucketed", "scan"],
+                    default="bucketed",
+                    help="edge-phase strategy for the batched/sharded "
+                         "runtimes: 'scan' runs each micro-batch as one "
+                         "masked scan-over-layers program (ignored by "
+                         "--distributed, which stays bucketed)")
     ap.add_argument("--replicas", type=int, default=0,
                     help=">0 serves through the sharded data-parallel "
                          "runtime with that many replicas (on CPU set "
@@ -121,9 +127,10 @@ def main():
             path="sharded",
             batch_size=max(args.batch_size, args.replicas),
             replicas=args.replicas, overlap_depth=args.overlap_depth,
-            max_samples=args.samples)
+            edge_mode=args.edge_mode, max_samples=args.samples)
     else:
         scfg = ServingConfig(batch_size=args.batch_size,
+                             edge_mode=args.edge_mode,
                              max_samples=args.samples)
 
     runtime = EdgeCloudRuntime(cfg)

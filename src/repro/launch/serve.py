@@ -91,6 +91,12 @@ def add_serving_config_args(ap: argparse.ArgumentParser):
     ap.add_argument("--batch-size", type=int, default=None,
                     help="micro-batch size B; >1 selects the batched "
                          "delayed-feedback runtime (config: batch_size)")
+    ap.add_argument("--edge-mode", choices=["bucketed", "scan"],
+                    default=None,
+                    help="edge-phase strategy (config: edge_mode): "
+                         "'bucketed' = one pow2-padded launch per distinct "
+                         "split depth, 'scan' = one masked scan-over-layers "
+                         "program per batch shape")
     ap.add_argument("--mesh", action="store_true", default=None,
                     help="serve through the sharded data-parallel runtime "
                          "on a 1-D device mesh (config: mesh)")
@@ -150,6 +156,8 @@ def serving_config_from_args(args) -> ServingConfig:
         overrides["side_info"] = True
     if args.batch_size is not None:
         overrides["batch_size"] = args.batch_size
+    if args.edge_mode is not None:
+        overrides["edge_mode"] = args.edge_mode
     if args.mesh:
         overrides["mesh"] = True
     if args.replicas is not None:

@@ -328,6 +328,71 @@ def forward_exits(params, cfg: ModelConfig, batch: Dict[str, Any], *,
     }
 
 
+def forward_exits_masked(params, cfg: ModelConfig, batch: Dict[str, Any],
+                         depths, *, backend: str = "ref",
+                         conf_backend: str = "ref", window=None):
+    """Depth-masked scan over layers: one program for every depth mix.
+
+    ``depths`` is a (B,) int32 vector of 0-indexed split layers, one per
+    sample. The layer loop is the same single ``lax.scan`` over the
+    stacked layer params as `forward_exits`, but the carry freezes per
+    sample once its own split layer has run (``jnp.where(i <= depths)``
+    on the scan state), so the final carry is each sample's hidden
+    activation *at its own split depth* — the offload payload. Exit
+    observables are still collected for every layer and reduced
+    post-scan by one fused confidence call; rows past a sample's depth
+    are computed from its frozen carry and are simply unused by serving.
+
+    This is the scan-over-layers serving forward: one compiled program
+    covers every split depth a batch mixes (serving/scan_edge.py drives
+    it), where the bucketed path compiles per (depth-bucket, row-count)
+    launch shape.
+
+    ``window`` overrides the attention window (the serving runtime
+    passes 0, matching `EdgeCloudRuntime.edge_fn`); None derives it from
+    the sequence length as the training/eval forwards do.
+
+    Returns dict with conf (L, B) f32, pred (L, B) i32 — layer i's exit
+    observables at row i-1 — and hidden (B, S, D) at per-sample depth.
+    """
+    x = embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = _positions(cfg, b, s)
+    if window is None:
+        window = cfg.effective_window(s)
+    live = depths[:, None, None]            # (B, 1, 1) broadcast mask
+
+    def body(carry, inp):
+        xx = carry
+        lp, i = inp
+        xx2, _ = _layer_full(cfg, params, lp, xx, positions, i,
+                             window=window, backend=backend)
+        xx = jnp.where(i <= live, xx2, xx)
+        pooled = pool_hidden(cfg, apply_norm(xx, lp["exit_norm"], cfg.norm))
+        return xx, pooled
+
+    idx = jnp.arange(cfg.num_layers)
+    x, pooled = jax.lax.scan(body, x, (params["layers"], idx),
+                             unroll=_unroll())
+    # pooled: (L, B, D) — per-layer exit pools, frozen past each depth
+    l, bb, d = pooled.shape
+    if cfg.exits.share_head or not cfg.exits.enabled:
+        conf, pred = exit_confidence(pooled.reshape(l * bb, d),
+                                     params["exit_w"],
+                                     backend=conf_backend)
+    else:
+        conf, pred = jax.vmap(
+            lambda p_i, w_i: exit_confidence(p_i, w_i,
+                                             backend=conf_backend))(
+            pooled, params["layers"]["exit_w"])
+        conf, pred = conf.reshape(l * bb), pred.reshape(l * bb)
+    return {
+        "conf": conf.reshape(l, bb),
+        "pred": pred.reshape(l, bb),
+        "hidden": x,
+    }
+
+
 # ----------------------------------------------------------- prefill / decode
 
 def init_caches(cfg: ModelConfig, batch: int, seq_len: int):

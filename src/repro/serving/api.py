@@ -49,6 +49,7 @@ from repro.serving.sharded import _ShardedSession, _serve_stream_sharded
 from repro.serving.simulator import EdgeCloudRuntime, _serve_stream_sequential
 
 PATHS = ("auto", "sequential", "batched", "sharded", "distributed")
+EDGE_MODES = ("bucketed", "scan")
 
 
 def _err(field: str, got, fix: str) -> str:
@@ -76,6 +77,7 @@ class ServingConfig:
     path: str = "auto"
     # ---- micro-batching / policy (all paths) ---------------------------
     batch_size: int = 1
+    edge_mode: str = "bucketed"       # "scan" = one masked-scan program
     side_info: bool = False           # SplitEE-S: read all exits <= depth
     beta: float = 1.0                 # UCB exploration coefficient
     max_samples: int = 0              # 0 = serve the stream to exhaustion
@@ -185,6 +187,23 @@ class ServingConfig:
                 "the request scheduler drives a single-process Engine "
                 "session; distributed clusters must consume a shared "
                 "offline stream (set distributed=False)"))
+        if self.edge_mode not in EDGE_MODES:
+            raise ValueError(_err(
+                "edge_mode", self.edge_mode,
+                f"choose one of {EDGE_MODES} ('bucketed' = one pow2 "
+                f"launch per distinct split depth, 'scan' = one "
+                f"masked scan-over-layers program per batch shape)"))
+        if self.edge_mode == "scan" and self.path == "sequential":
+            raise ValueError(_err(
+                "edge_mode", self.edge_mode,
+                "the sequential path has no micro-batch edge phase to "
+                "swap; use path='batched' (or leave path='auto', which "
+                "resolves scan configs to the batched runtime)"))
+        if self.edge_mode == "scan" and self.distributed:
+            raise ValueError(_err(
+                "edge_mode", self.edge_mode,
+                "the distributed runtime keeps the bucketed edge phase; "
+                "use the batched/sharded paths for scan mode"))
         if self.fault_tolerant and not self.distributed:
             raise ValueError(_err(
                 "fault_tolerant", True,
@@ -238,7 +257,8 @@ class ServingConfig:
             return "distributed"
         if self.replicas > 1 or self.mesh:
             return "sharded"
-        if self.batch_size > 1 or self.record_trace:
+        if (self.batch_size > 1 or self.record_trace
+                or self.edge_mode == "scan"):
             return "batched"
         return "sequential"
 
@@ -437,6 +457,7 @@ def serve(runtime: EdgeCloudRuntime, params, stream, cost: CostModel,
         raw = _serve_stream_batched(runtime, params, stream, cost,
                                     batch_size=config.batch_size,
                                     record_trace=config.record_trace,
+                                    edge_mode=config.edge_mode,
                                     **common)
     elif path == "sharded":
         raw = _serve_stream_sharded(runtime, params, stream, cost,
@@ -445,6 +466,7 @@ def serve(runtime: EdgeCloudRuntime, params, stream, cost: CostModel,
                                     overlap=config.overlap,
                                     overlap_depth=config.overlap_depth,
                                     record_trace=config.record_trace,
+                                    edge_mode=config.edge_mode,
                                     **common)
     else:
         raw = _serve_stream_distributed(
@@ -525,7 +547,7 @@ class Engine:
                 replicas=c.replicas, mesh=mesh, overlap=c.overlap,
                 overlap_depth=c.overlap_depth, side_info=c.side_info,
                 beta=c.beta, labels_for_accounting=c.labels_for_accounting,
-                record_trace=c.record_trace)
+                record_trace=c.record_trace, edge_mode=c.edge_mode)
         else:
             if mesh is not None:
                 raise ValueError(
@@ -537,7 +559,7 @@ class Engine:
                 runtime, params, cost, batch_size=c.batch_size,
                 side_info=c.side_info, beta=c.beta,
                 labels_for_accounting=c.labels_for_accounting,
-                record_trace=c.record_trace)
+                record_trace=c.record_trace, edge_mode=c.edge_mode)
         self._clock = clock if clock is not None else time.monotonic
         self._sched: Optional[RequestScheduler] = None
         if c.scheduler != "none":

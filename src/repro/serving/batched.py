@@ -16,7 +16,9 @@ This module serves the same stream in micro-batches of B samples:
      one `edge_fn`/`edge_fn_s` launch. Buckets are padded to power-of-two
      row counts so at most log2(B)+1 shapes are ever compiled per
      function (depth itself is a traced argument — no recompile across
-     depths);
+     depths). With ``edge_mode="scan"`` this step is replaced by
+     `serving.scan_edge._edge_phase_scan`: one masked scan-over-layers
+     launch for the whole micro-batch, bit-identical outputs;
   4. **cloud** — non-exiting samples land in an `OffloadQueue`; at the
      batch boundary the queue flushes one batched `cloud_fn` launch per
      depth bucket (again pow2-padded);
@@ -249,12 +251,16 @@ class _BatchedSession:
     def __init__(self, runtime: EdgeCloudRuntime, params, cost: CostModel,
                  *, batch_size: int = 32, side_info: bool = False,
                  beta: float = 1.0, labels_for_accounting: bool = True,
-                 record_trace: bool = False):
+                 record_trace: bool = False, edge_mode: str = "bucketed"):
+        # lazy import: scan_edge imports OffloadQueue/_pad_rows from here
+        from repro.serving.scan_edge import select_edge_phase
         self.runtime = runtime
         self.params = params
         self.cost = cost
         self.batch_size = batch_size
         self.side_info = side_info
+        self.edge_mode = edge_mode
+        self._edge_phase = select_edge_phase(edge_mode)
         self.labels_for_accounting = labels_for_accounting
         self.ctl = SplitEEController(cost, beta=beta, side_info=side_info)
         self.queue = OffloadQueue(runtime, params)
@@ -277,8 +283,8 @@ class _BatchedSession:
         tokens = np.stack([np.asarray(s["tokens"]) for s in batch])
         seq_len = tokens.shape[1]
 
-        # ---- edge: one launch per distinct chosen depth ----------------
-        conf_paths, batch_preds = _edge_phase(
+        # ---- edge: per-depth bucket launches, or one masked scan -------
+        conf_paths, batch_preds = self._edge_phase(
             self.runtime, self.params, tokens, arms, self.cost, self.queue,
             side_info=self.side_info)
 
@@ -339,12 +345,13 @@ def _serve_stream_batched(runtime: EdgeCloudRuntime, params, stream,
                           side_info: bool = False, beta: float = 1.0,
                           max_samples: int = 0,
                           labels_for_accounting: bool = True,
-                          record_trace: bool = False) -> Dict[str, Any]:
+                          record_trace: bool = False,
+                          edge_mode: str = "bucketed") -> Dict[str, Any]:
     """Offline driver: replay a finite stream through a batched session."""
     sess = _BatchedSession(runtime, params, cost, batch_size=batch_size,
                            side_info=side_info, beta=beta,
                            labels_for_accounting=labels_for_accounting,
-                           record_trace=record_trace)
+                           record_trace=record_trace, edge_mode=edge_mode)
     for batch in microbatches(stream, batch_size, max_samples):
         sess.push(batch)
     return sess.result()

@@ -1,0 +1,95 @@
+"""Masked scan edge phase — one compiled program per batch shape.
+
+`batched._edge_phase` buckets each micro-batch by chosen depth and pays
+one pow2-padded `edge_fn` launch per distinct depth: k distinct arms in
+a batch mean k host-side dispatches and up to k compiled shapes. This
+module is its scan twin: the whole micro-batch goes through ONE
+`edge_scan_fn` launch that scans over all L stacked layers with a
+per-sample depth mask carried in the scan state
+(`models.transformer.forward_exits_masked`) — each row's carry freezes
+at its own split depth, so the final carry is the per-sample offload
+payload and the (L, B) confidence/prediction planes hold every exit's
+observables. The serving layer then slices per sample host-side
+(`conf[:arm+1, s]` for SplitEE-S, `conf[arm, s]` otherwise) and queues
+non-exiting rows on the same `OffloadQueue`, in the same
+[depth ascending, slot ascending] order the bucketed phase produces —
+cloud flushes stay bit-identical.
+
+Compiled-program accounting: the scan program depends only on the batch
+*shape*, never on the depth values — a batch mixing every depth in the
+arm space still compiles once. The trade is wasted FLOPs: every row
+runs (a masked no-op through) all L layers, so bucketed wins when the
+depth mix is narrow and shallow, scan when it is wide (see
+docs/SERVING.md).
+
+Padding: rows are padded to a multiple of `replicas` (ceil — no pow2)
+so sharded launches divide the mesh's data axis; with replicas=1 a
+batch is launched exactly as-is. Padded rows repeat the last live row
+and are dropped host-side; the masked forward keeps rows independent,
+so they cannot perturb live rows (pinned by the property suite).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rewards import CostModel
+from repro.serving.batched import OffloadQueue, _pad_rows
+from repro.serving.simulator import EdgeCloudRuntime
+
+EDGE_MODES = ("bucketed", "scan")
+
+
+def _edge_phase_scan(runtime: EdgeCloudRuntime, params, tokens: np.ndarray,
+                     arms: np.ndarray, cost: CostModel, queue: OffloadQueue,
+                     *, side_info: bool, put=jnp.asarray, replicas: int = 1):
+    """Run one micro-batch's edge pass as a single masked-scan launch.
+
+    Drop-in twin of `batched._edge_phase` (same signature, same
+    (conf_paths, batch_preds) contract, same queue insertion order);
+    shared by the batched and sharded runtimes, which differ only in
+    host->device placement (``put``) and the row-padding multiple
+    (``replicas``).
+    """
+    B = len(arms)
+    arms_np = np.asarray(arms, dtype=np.int32)
+    cap = -(-B // replicas) * replicas
+    toks = _pad_rows(tokens, cap)
+    deps = _pad_rows(arms_np, cap)
+    conf_all, pred_all, hidden = runtime.edge_scan_fn(
+        params, {"tokens": put(toks)}, put(deps))
+    conf_np = np.asarray(conf_all)                     # (L, cap)
+    pred_np = np.asarray(pred_all)                     # (L, cap)
+    conf_paths: List[Optional[np.ndarray]] = [None] * B
+    batch_preds = [0] * B
+    for s in range(B):
+        arm = int(arms_np[s])
+        # SplitEE-S reads the whole exit path <= depth; plain SplitEE
+        # reads one exit — same per-sample views _edge_phase returns.
+        conf_paths[s] = (conf_np[: arm + 1, s] if side_info
+                         else conf_np[arm:arm + 1, s])
+        batch_preds[s] = int(pred_np[arm, s])
+    keep = [s for s in range(B)
+            if not (float(conf_paths[s][-1]) >= cost.alpha
+                    or int(arms_np[s]) + 1 == cost.num_layers)]
+    if keep:
+        h_np = np.asarray(hidden)        # one device->host transfer total
+        # depth-ascending, slot-ascending — matches the bucketed phase's
+        # np.unique(arms) walk, so cloud flush launches are identical.
+        for arm in np.unique(arms_np[keep]):
+            rows = [s for s in keep if int(arms_np[s]) == int(arm)]
+            queue.add_rows(int(arm), h_np[rows], rows)
+    return conf_paths, batch_preds
+
+
+def select_edge_phase(edge_mode: str):
+    """Resolve an ``edge_mode`` string to its phase function."""
+    if edge_mode == "scan":
+        return _edge_phase_scan
+    if edge_mode == "bucketed":
+        from repro.serving.batched import _edge_phase
+        return _edge_phase
+    raise ValueError(
+        f"unknown edge_mode {edge_mode!r}; expected one of {EDGE_MODES}")

@@ -58,7 +58,7 @@ from repro.core.rewards import CostModel
 from repro.data.stream import microbatches
 from repro.launch.mesh import make_serving_mesh
 from repro.launch.shardings import param_shardings, sanitize_spec
-from repro.serving.batched import OffloadQueue, _edge_phase
+from repro.serving.batched import OffloadQueue
 from repro.serving.simulator import EdgeCloudRuntime
 
 
@@ -233,7 +233,8 @@ class _ShardedSession:
                  mesh: Optional[Mesh] = None, overlap: bool = True,
                  overlap_depth: int = 1, side_info: bool = False,
                  beta: float = 1.0, labels_for_accounting: bool = True,
-                 record_trace: bool = False):
+                 record_trace: bool = False, edge_mode: str = "bucketed"):
+        from repro.serving.scan_edge import select_edge_phase
         if replicas < 1:
             raise ValueError(f"replicas must be >= 1, got {replicas}")
         if overlap_depth < 1:
@@ -256,6 +257,8 @@ class _ShardedSession:
         self.overlap_depth = overlap_depth
         self.side_info = side_info
         self.labels_for_accounting = labels_for_accounting
+        self.edge_mode = edge_mode
+        self._edge_phase = select_edge_phase(edge_mode)
 
         self.put = _data_put(mesh)
         amap = {"model": "model" if "model" in mesh.axis_names else None,
@@ -283,8 +286,8 @@ class _ShardedSession:
         arms = self.ctl.choose_splits(B)
         tokens = np.stack([np.asarray(s["tokens"]) for s in batch])
 
-        # ---- edge: one data-parallel launch per distinct chosen depth --
-        conf_paths, batch_preds = _edge_phase(
+        # ---- edge: data-parallel bucket launches, or one masked scan ---
+        conf_paths, batch_preds = self._edge_phase(
             self.runtime, self.params, tokens, arms, self.cost, self.queue,
             side_info=self.side_info, put=self.put, replicas=self.replicas)
 
@@ -359,7 +362,8 @@ def _serve_stream_sharded(runtime: EdgeCloudRuntime, params, stream,
                           side_info: bool = False,
                           beta: float = 1.0, max_samples: int = 0,
                           labels_for_accounting: bool = True,
-                          record_trace: bool = False) -> Dict[str, Any]:
+                          record_trace: bool = False,
+                          edge_mode: str = "bucketed") -> Dict[str, Any]:
     """Offline driver: replay a finite stream through a sharded session.
 
     Same contract as `_serve_stream_batched`, plus:
@@ -384,7 +388,7 @@ def _serve_stream_sharded(runtime: EdgeCloudRuntime, params, stream,
                            overlap_depth=overlap_depth, side_info=side_info,
                            beta=beta,
                            labels_for_accounting=labels_for_accounting,
-                           record_trace=record_trace)
+                           record_trace=record_trace, edge_mode=edge_mode)
     for batch in microbatches(stream, batch_size, max_samples):
         sess.push(batch)
     sess.drain()

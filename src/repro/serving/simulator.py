@@ -32,7 +32,8 @@ from repro.core.rewards import CostModel
 from repro.kernels.exit_confidence.ops import exit_confidence
 from repro.models.common import apply_norm
 from repro.models.transformer import (_exit_w, _layer_full, _positions,
-                                      embed_inputs, pool_hidden)
+                                      embed_inputs, forward_exits_masked,
+                                      pool_hidden)
 
 
 @dataclasses.dataclass
@@ -113,9 +114,24 @@ class EdgeCloudRuntime:
             x_at_depth = None  # S-variant offloads from `depth` too
             return conf.reshape(l, bb), pred.reshape(l, bb), x
 
+        @jax.jit
+        def edge_scan_fn(params, batch, depths):
+            """Masked scan edge pass: one program per batch *shape*.
+
+            `depths` is a per-sample (B,) vector of 0-indexed arms; the
+            scan carry freezes each row at its own depth, so `hidden`
+            is the per-sample offload payload and conf/pred hold every
+            exit's observables (serving slices per sample host-side).
+            Unlike `edge_fn`, the compiled program does not depend on
+            the depth values at all — only on the batch shape."""
+            out = forward_exits_masked(params, cfg, batch, depths,
+                                       backend=backend, window=0)
+            return out["conf"], out["pred"], out["hidden"]
+
         self.edge_fn = edge_fn
         self.cloud_fn = cloud_fn
         self.edge_fn_s = edge_fn_s
+        self.edge_scan_fn = edge_scan_fn
 
     def offload_bytes(self, batch_size: int, seq_len: int) -> int:
         return batch_size * seq_len * self.cfg.d_model \
