@@ -1,0 +1,197 @@
+"""Non-stationary serving benchmark: regret vs a trace-aware oracle on a
+drifting stream with time-varying offload cost.
+
+    PYTHONPATH=src:. python benchmarks/serve_drift.py
+    PYTHONPATH=src:. python benchmarks/serve_drift.py --smoke --out ''
+
+The stream is a 2-shift `DriftSpec` (a long yelp-like warmup sliding
+into scitail-like late exits, then qqp-like overconfidence) with a step
+`CostTrace` whose offload cost jumps at the same boundaries — the
+Dynamic Split Computing / I-SplitEE setting. Each regime has a
+*different* optimal split (shallow → deep → mid), so a controller stuck
+on the previous regime's arm is wrong after every shift. Two
+controllers serve the identical stream through the identical
+delayed-feedback batch schedule:
+
+  * **stationary** — the paper's UCB controller; its incremental means
+    average across regimes, so after a shift it stays stuck on the old
+    regime's split until the new evidence outweighs the entire past;
+  * **adaptive** — ``mode="sliding_window"``: only the last W batches
+    vote, so the controller re-converges after each shift at a rate set
+    by W, not by the stream's age.
+
+The oracle knows the trace: per segment it plays the single best split
+for that segment's confidence profile under that segment's offload cost
+(eq. (2) restricted to the segment). Per-sample regret is the oracle
+arm's reward minus the played arm's reward, both priced at the cost in
+effect when the sample was served; the artifact pins that the adaptive
+controller's cumulative regret over each post-shift segment is strictly
+below the stationary controller's (BENCH_serve_drift.json,
+"regret_after_shift").
+"""
+import argparse
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.core import CostModel, CostTrace, SplitEEController, oracle_arm
+from repro.data.profiles import PROFILE_DATASETS, DriftSpec, \
+    simulate_drift_profiles
+
+B = 16                  # micro-batch size (delayed feedback within a batch)
+SEG_N = 1600            # samples in each post-shift segment (full run)
+SMOKE_SEG_N = 192       # samples in each post-shift segment (--smoke)
+WARMUP_SEGS = 3         # segment 0 is this many times longer (heavy history)
+ALPHA = 0.8
+OFFLOADS = (1.0, 12.0, 20.0)  # per-segment offload cost (the trace steps)
+SEED = 7
+
+
+def window_for(seg_n: int) -> int:
+    """Adaptive window = one post-shift segment's worth of micro-batches,
+    so the ring fully turns over within a segment at either scale."""
+    return max(1, seg_n // B)
+
+
+def build_scenario(seg_n: int):
+    """2-shift drifting stream + the step trace aligned to its shifts.
+
+    A long yelp-like segment builds up heavy history, then the domain and
+    the offload cost shift twice; the per-segment oracle arms move
+    shallow -> deep -> mid, so the stationary average is wrong after both
+    shifts."""
+    spec = DriftSpec("yelp->scitail->qqp", (
+        (WARMUP_SEGS * seg_n, PROFILE_DATASETS["yelp"]),
+        (seg_n, PROFILE_DATASETS["scitail"]),
+        (seg_n, PROFILE_DATASETS["qqp"]),
+    ))
+    data = simulate_drift_profiles(spec, seed=SEED)
+    trace = CostTrace(kind="steps", times=tuple(int(b) for b in
+                                                data["boundaries"]),
+                      values=OFFLOADS)
+    return spec, data, trace
+
+
+def serve_profiles(ctl: SplitEEController, conf: np.ndarray,
+                   batch_size: int) -> np.ndarray:
+    """Drive a controller over a (N, L) confidence matrix in micro-batches
+    — the exact `update_batch` schedule the serving paths run, minus the
+    model (the profiles ARE the observables). Returns the played arms."""
+    n, L = conf.shape
+    played = np.empty(n, np.int64)
+    for start in range(0, n, batch_size):
+        rows = conf[start:start + batch_size]
+        arms = ctl.choose_splits(len(rows))
+        paths, conf_Ls = [], []
+        for k, arm in enumerate(arms):
+            c_i = float(rows[k, arm])
+            paths.append(np.asarray([c_i]))
+            exited = c_i >= ctl.cost.alpha or int(arm) + 1 == L
+            conf_Ls.append(None if exited else float(rows[k, -1]))
+        ctl.update_batch(arms, paths, conf_Ls, [0] * len(rows), round=start)
+        played[start:start + len(rows)] = arms
+    return played
+
+
+def oracle_regret(cost: CostModel, conf: np.ndarray, played: np.ndarray,
+                  boundaries, trace: CostTrace) -> np.ndarray:
+    """Per-sample regret vs the trace-aware per-segment oracle."""
+    edges = [0, *[int(b) for b in boundaries], len(conf)]
+    regret = np.empty(len(conf))
+    for lo, hi in zip(edges, edges[1:]):
+        seg_cost = dataclasses.replace(cost, offload=trace.offload_at(lo))
+        seg_conf = conf[lo:hi].astype(np.float64)
+        star, _ = oracle_arm(seg_cost, seg_conf, side_info=False)
+        layers = np.arange(1, conf.shape[1] + 1, dtype=np.float64)
+        r, _ = seg_cost.reward(layers[None, :], seg_conf,
+                               seg_conf[:, -1:], side_info=False)
+        r = np.asarray(r)
+        idx = np.arange(hi - lo)
+        regret[lo:hi] = r[idx, star] - r[idx, played[lo:hi]]
+    return regret
+
+
+def run(*, smoke: bool = False, print_csv: bool = True,
+        out_path: str = "BENCH_serve_drift.json"):
+    seg_n = SMOKE_SEG_N if smoke else SEG_N
+    window = window_for(seg_n)
+    spec, data, trace = build_scenario(seg_n)
+    conf = data["conf"]
+    boundaries = [int(b) for b in data["boundaries"]]
+    cost = CostModel(num_layers=conf.shape[1], alpha=ALPHA)
+
+    controllers = {
+        "stationary": SplitEEController(cost, cost_trace=trace,
+                                        record_history=False),
+        "adaptive": SplitEEController(cost, mode="sliding_window",
+                                      window=window, cost_trace=trace,
+                                      record_history=False),
+    }
+    rows = []
+    regrets = {}
+    for name, ctl in controllers.items():
+        played = serve_profiles(ctl, conf, B)
+        regrets[name] = oracle_regret(cost, conf, played, boundaries, trace)
+    edges = [0, *boundaries, len(conf)]
+    if print_csv:
+        print("segment,domain,offload,stationary_regret,adaptive_regret")
+    shifts = []
+    for i, (lo, hi) in enumerate(zip(edges, edges[1:])):
+        seg = {
+            "segment": i,
+            "domain": data["segments"][i],
+            "offload": trace.offload_at(lo),
+            "start": lo,
+            "n": hi - lo,
+            "stationary_regret": round(
+                float(regrets["stationary"][lo:hi].sum()), 4),
+            "adaptive_regret": round(
+                float(regrets["adaptive"][lo:hi].sum()), 4),
+        }
+        rows.append(seg)
+        if print_csv:
+            print(f"{i},{seg['domain']},{seg['offload']},"
+                  f"{seg['stationary_regret']},{seg['adaptive_regret']}")
+        if i > 0:
+            shifts.append({
+                "segment": i,
+                "stationary": seg["stationary_regret"],
+                "adaptive": seg["adaptive_regret"],
+                "adaptive_below": seg["adaptive_regret"]
+                < seg["stationary_regret"],
+            })
+    assert all(s["adaptive_below"] for s in shifts), (
+        f"adaptive controller must beat stationary after each shift: "
+        f"{shifts}")
+    artifact = {
+        "benchmark": "serve_drift",
+        "config": {"batch_size": B, "window": window,
+                   "segment_samples": seg_n, "alpha": cost.alpha,
+                   "offloads": list(OFFLOADS), "seed": SEED,
+                   "drift": spec.name, "smoke": smoke},
+        "trace": trace.to_dict(),
+        "segments": rows,
+        "regret_after_shift": shifts,
+        "cumulative_regret": {
+            name: round(float(r.sum()), 4) for name, r in regrets.items()},
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"wrote {out_path}")
+    return artifact
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny segments for CI (<30 s)")
+    ap.add_argument("--out", default="BENCH_serve_drift.json",
+                    help="artifact path ('' disables)")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

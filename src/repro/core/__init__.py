@@ -1,5 +1,5 @@
 """The paper's contribution: SplitEE / SplitEE-S online split+exit policy."""
-from repro.core.rewards import CostModel, oracle_arm  # noqa: F401
+from repro.core.rewards import CostModel, CostTrace, oracle_arm  # noqa: F401
 from repro.core.policy import (  # noqa: F401
     BanditState,
     bandit_step,
@@ -22,6 +22,7 @@ from repro.core.baselines import (  # noqa: F401
 )
 from repro.core.thresholds import calibrate_alpha  # noqa: F401
 from repro.core.controller import (  # noqa: F401
+    CONTROLLER_MODES,
     ShardUpdate,
     SplitEEController,
     state_from_bytes,

@@ -9,10 +9,18 @@ infer). Arm i (1-indexed layer):
 
 Reward (eq. 1):  r(i) = C_i - mu*gamma_i                 if C_i >= alpha or i = L
                  r(i) = C_L - mu*(gamma_i + o)           otherwise.
+
+`CostTrace` makes the offload term `o` a function of the stream round:
+the controller consults the trace at each batch boundary and recomputes
+eq. (1) against the cost in effect when the sample was served (Dynamic
+Split Computing's bandwidth-tracking setting).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import math
+from typing import Any, Dict, Tuple
 
 import jax.numpy as jnp
 
@@ -52,6 +60,82 @@ class CostModel:
         offloading is not charged (paper's accounting)."""
         g = self.gamma(layer, side_info=side_info)
         return g + jnp.where(exits, 0.0, self.offload)
+
+
+TRACE_KINDS = ("constant", "steps", "sinusoid")
+
+
+@dataclasses.dataclass(frozen=True)
+class CostTrace:
+    """Time-varying offload cost ``o(round)``.
+
+    ``round`` is the global stream position (sample index) of the first
+    sample of a batch — every host of a cluster derives the same round
+    for the same batch, so the effective cost is deterministic across
+    replicas and survives fault-tolerant re-slicing.
+
+    Kinds:
+
+    * ``constant`` — ``o(t) = base`` (the stationary paper setting).
+    * ``steps`` — piecewise-constant bandwidth trace: ``times`` are
+      ascending round boundaries, ``values`` the per-segment offload
+      costs (``len(values) == len(times) + 1``; segment k covers rounds
+      ``[times[k-1], times[k])``).
+    * ``sinusoid`` — diurnal load: ``base + amplitude *
+      sin(2*pi*t/period)``.
+    """
+    kind: str = "constant"
+    base: float = 5.0
+    times: Tuple[int, ...] = ()
+    values: Tuple[float, ...] = ()
+    period: float = 0.0
+    amplitude: float = 0.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "times", tuple(int(t) for t in self.times))
+        object.__setattr__(self, "values",
+                           tuple(float(v) for v in self.values))
+        if self.kind not in TRACE_KINDS:
+            raise ValueError(f"CostTrace.kind={self.kind!r}: expected one "
+                             f"of {TRACE_KINDS}")
+        if self.kind == "steps":
+            if len(self.values) != len(self.times) + 1:
+                raise ValueError(
+                    f"CostTrace(kind='steps') needs len(values) == "
+                    f"len(times) + 1, got {len(self.values)} values for "
+                    f"{len(self.times)} boundaries")
+            if any(b <= a for a, b in zip(self.times, self.times[1:])):
+                raise ValueError(f"CostTrace.times must be strictly "
+                                 f"ascending, got {self.times}")
+        if self.kind == "sinusoid" and self.period <= 0:
+            raise ValueError(f"CostTrace(kind='sinusoid') needs period > 0, "
+                             f"got {self.period}")
+
+    def offload_at(self, round: int) -> float:
+        """Offload cost in effect at global stream position ``round``."""
+        if self.kind == "steps":
+            return self.values[bisect.bisect_right(self.times, int(round))]
+        if self.kind == "sinusoid":
+            return self.base + self.amplitude * math.sin(
+                2.0 * math.pi * int(round) / self.period)
+        return self.base
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "base": self.base,
+                "times": list(self.times), "values": list(self.values),
+                "period": self.period, "amplitude": self.amplitude}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "CostTrace":
+        if not isinstance(d, dict):
+            raise ValueError(f"cost trace must be a dict, got "
+                             f"{type(d).__name__}")
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - fields)
+        if unknown:
+            raise ValueError(f"unknown cost-trace field(s) {unknown}; "
+                             f"valid: {sorted(fields)}")
+        return cls(**d)
 
 
 def oracle_arm(cost: CostModel, conf, *, side_info: bool):

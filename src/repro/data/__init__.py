@@ -4,4 +4,10 @@ from repro.data.stream import (  # noqa: F401
     batch_iterator,
     microbatches,
 )
-from repro.data.profiles import simulate_exit_profiles, PROFILE_DATASETS  # noqa: F401
+from repro.data.profiles import (  # noqa: F401
+    DriftSpec,
+    PROFILE_DATASETS,
+    ProfileSpec,
+    simulate_drift_profiles,
+    simulate_exit_profiles,
+)

@@ -25,7 +25,7 @@ tests; this module is for paper-scale numbers at tractable runtime.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Tuple
 
 import numpy as np
 
@@ -130,3 +130,62 @@ def simulate_exit_profiles(spec: ProfileSpec, seed: int = 0,
 
     conf = np.clip(conf, chance + 0.01, 0.995).astype(np.float32)
     return {"conf": conf, "correct": correct.astype(bool)}
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftSpec:
+    """A drifting stream: segment boundaries that switch `ProfileSpec`
+    parameters mid-stream (I-SplitEE's domain-shift setting — e.g. an
+    imdb-like regime sliding into qqp-like overconfidence).
+
+    ``segments`` is a sequence of ``(n_samples, ProfileSpec)`` pairs
+    served back to back; ``boundaries`` are the global stream positions
+    where each later segment begins (what a trace-aware oracle — and a
+    step `CostTrace` — keys on).
+    """
+    name: str
+    segments: Tuple[Tuple[int, ProfileSpec], ...]
+
+    def __post_init__(self):
+        segs = tuple((int(m), ps) for m, ps in self.segments)
+        object.__setattr__(self, "segments", segs)
+        if not segs:
+            raise ValueError("DriftSpec needs at least one segment")
+        for m, ps in segs:
+            if m <= 0:
+                raise ValueError(f"segment length {m} for {ps.name!r}: "
+                                 f"must be positive")
+
+    @property
+    def n(self) -> int:
+        return sum(m for m, _ in self.segments)
+
+    @property
+    def boundaries(self) -> Tuple[int, ...]:
+        """Stream positions where segments 1..k-1 begin (the shifts)."""
+        out, pos = [], 0
+        for m, _ in self.segments[:-1]:
+            pos += m
+            out.append(pos)
+        return tuple(out)
+
+
+def simulate_drift_profiles(spec: DriftSpec, seed: int = 0):
+    """Concatenate per-segment `simulate_exit_profiles` draws (distinct
+    seeds per segment) into one drifting stream.
+
+    Returns dict:
+      conf       (N, L) f32, correct (N, L) bool — as the stationary sim,
+      boundaries (k-1,) int64 — global positions of the k-1 shifts,
+      segments   list of the k segment names.
+    """
+    parts = []
+    for i, (m, ps) in enumerate(spec.segments):
+        seg = dataclasses.replace(ps, n=m)
+        parts.append(simulate_exit_profiles(seg, seed=seed + 1000 * i))
+    return {
+        "conf": np.concatenate([p["conf"] for p in parts], axis=0),
+        "correct": np.concatenate([p["correct"] for p in parts], axis=0),
+        "boundaries": np.asarray(spec.boundaries, np.int64),
+        "segments": [ps.name for _, ps in spec.segments],
+    }

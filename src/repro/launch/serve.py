@@ -126,6 +126,26 @@ def add_serving_config_args(ap: argparse.ArgumentParser):
                     help="seconds a host's heartbeat may be stale before "
                          "it is declared dead (config: heartbeat_timeout; "
                          "see docs/SERVING.md for sizing)")
+    ap.add_argument("--controller-mode",
+                    choices=["stationary", "sliding_window", "discounted"],
+                    default=None,
+                    help="bandit forgetting mode for non-stationary "
+                         "streams (config: controller_mode); see "
+                         "docs/SERVING.md, 'Non-stationary costs & "
+                         "drift'")
+    ap.add_argument("--window", type=int, default=None,
+                    help="sliding-window size in micro-batches (config: "
+                         "window; 0 = unbounded; needs "
+                         "--controller-mode sliding_window)")
+    ap.add_argument("--discount", type=float, default=None,
+                    help="per-sample pull-count decay gamma in (0, 1] "
+                         "(config: discount; needs --controller-mode "
+                         "discounted)")
+    ap.add_argument("--cost-trace", default=None, metavar="JSON",
+                    help="time-varying offload cost as a CostTrace JSON "
+                         "object (config: cost_trace), e.g. "
+                         "'{\"kind\": \"steps\", \"times\": [500], "
+                         "\"values\": [1.0, 8.0]}'")
     ap.add_argument("--scheduler", choices=["none", "fifo"], default=None,
                     help="continuous-batching request scheduler (config: "
                          "scheduler; see docs/SERVING.md, 'Request "
@@ -173,6 +193,15 @@ def serving_config_from_args(args) -> ServingConfig:
         overrides["distributed"] = True
     if args.heartbeat_timeout is not None:
         overrides["heartbeat_timeout"] = args.heartbeat_timeout
+    if args.controller_mode is not None:
+        overrides["controller_mode"] = args.controller_mode
+    if args.window is not None:
+        overrides["window"] = args.window
+    if args.discount is not None:
+        overrides["discount"] = args.discount
+    if args.cost_trace is not None:
+        import json
+        overrides["cost_trace"] = json.loads(args.cost_trace)
     if args.scheduler is not None:
         overrides["scheduler"] = args.scheduler
     if args.deadline_ms is not None:

@@ -40,7 +40,8 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
-from repro.core.rewards import CostModel
+from repro.core.controller import CONTROLLER_MODES
+from repro.core.rewards import CostModel, CostTrace
 from repro.serving.batched import _BatchedSession, _serve_stream_batched
 from repro.serving.distributed import _serve_stream_distributed
 from repro.serving.scheduler import (SCHEDULERS, SHED_POLICIES,
@@ -98,9 +99,15 @@ class ServingConfig:
     max_queue: int = 0                # admission cap; 0 = unbounded queue
     batch_deadline_ms: float = 0.0    # close partial batches after this wait
     shed_policy: str = "reject"       # queue-full policy: reject | drop_oldest
+    # ---- non-stationary controller (all paths) -------------------------
+    controller_mode: str = "stationary"  # | "sliding_window" | "discounted"
+    window: int = 0                   # sliding-window size in batches; 0 = inf
+    discount: float = 1.0             # discounted-mode decay factor gamma
+    cost_trace: Optional[Dict[str, Any]] = None  # CostTrace.to_dict() payload
     # ---- diagnostics ---------------------------------------------------
     record_trace: bool = False        # per-sample confidences (batched/sharded)
     record_states: bool = False       # per-batch controller snapshots (distributed)
+    record_history: bool = True       # per-sample controller history lists
 
     def __post_init__(self):
         if self.path not in PATHS:
@@ -204,6 +211,41 @@ class ServingConfig:
                 "edge_mode", self.edge_mode,
                 "the distributed runtime keeps the bucketed edge phase; "
                 "use the batched/sharded paths for scan mode"))
+        if self.controller_mode not in CONTROLLER_MODES:
+            raise ValueError(_err(
+                "controller_mode", self.controller_mode,
+                f"choose one of {CONTROLLER_MODES} ('sliding_window' "
+                f"forgets beyond the last `window` batches, 'discounted' "
+                f"decays pull counts by `discount` per sample)"))
+        if self.window < 0:
+            raise ValueError(_err(
+                "window", self.window,
+                "the sliding window is counted in micro-batches and must "
+                "be >= 0 (0 = unbounded, bit-identical to stationary)"))
+        if self.window and self.controller_mode != "sliding_window":
+            raise ValueError(_err(
+                "window", self.window,
+                f"a finite window needs "
+                f"controller_mode='sliding_window', got "
+                f"{self.controller_mode!r}"))
+        if not 0.0 < self.discount <= 1.0:
+            raise ValueError(_err(
+                "discount", self.discount,
+                "the per-sample decay factor gamma must be in (0, 1] "
+                "(1.0 = no forgetting, bit-identical to stationary)"))
+        if self.discount != 1.0 and self.controller_mode != "discounted":
+            raise ValueError(_err(
+                "discount", self.discount,
+                f"a decay factor != 1.0 needs "
+                f"controller_mode='discounted', got "
+                f"{self.controller_mode!r}"))
+        if self.cost_trace is not None:
+            try:
+                CostTrace.from_dict(self.cost_trace)
+            except (ValueError, TypeError) as e:
+                raise ValueError(_err(
+                    "cost_trace", self.cost_trace,
+                    f"must be a CostTrace.to_dict() payload: {e}")) from e
         if self.fault_tolerant and not self.distributed:
             raise ValueError(_err(
                 "fault_tolerant", True,
@@ -394,6 +436,21 @@ class ServeReport:
 
 # ----------------------------------------------------------------- facade
 
+def _controller_kwargs(config: ServingConfig) -> Optional[Dict[str, Any]]:
+    """Controller-construction kwargs a config implies, or None when the
+    config asks for the default stationary controller (so legacy paths
+    construct it exactly as before)."""
+    if (config.controller_mode == "stationary"
+            and config.cost_trace is None and config.record_history):
+        return None
+    return dict(
+        mode=config.controller_mode, window=config.window,
+        discount=config.discount,
+        cost_trace=(CostTrace.from_dict(config.cost_trace)
+                    if config.cost_trace is not None else None),
+        record_history=config.record_history)
+
+
 def serve(runtime: EdgeCloudRuntime, params, stream, cost: CostModel,
           config: Optional[ServingConfig] = None, *,
           mesh=None, exchange=None, init_state=None,
@@ -448,7 +505,8 @@ def serve(runtime: EdgeCloudRuntime, params, stream, cost: CostModel,
         return eng.close()
     common = dict(side_info=config.side_info, beta=config.beta,
                   max_samples=config.max_samples,
-                  labels_for_accounting=config.labels_for_accounting)
+                  labels_for_accounting=config.labels_for_accounting,
+                  controller_kwargs=_controller_kwargs(config))
     t0 = time.perf_counter()
     if path == "sequential":
         raw = _serve_stream_sequential(runtime, params, stream, cost,
@@ -541,13 +599,15 @@ class Engine:
                 "serve() with the distributed ServingConfig on each host")
         c = self.config
         self._path = path             # what serve() would report
+        ctl_kw = _controller_kwargs(c)
         if path == "sharded":
             self._sess = _ShardedSession(
                 runtime, params, cost, batch_size=c.batch_size,
                 replicas=c.replicas, mesh=mesh, overlap=c.overlap,
                 overlap_depth=c.overlap_depth, side_info=c.side_info,
                 beta=c.beta, labels_for_accounting=c.labels_for_accounting,
-                record_trace=c.record_trace, edge_mode=c.edge_mode)
+                record_trace=c.record_trace, edge_mode=c.edge_mode,
+                controller_kwargs=ctl_kw)
         else:
             if mesh is not None:
                 raise ValueError(
@@ -559,7 +619,8 @@ class Engine:
                 runtime, params, cost, batch_size=c.batch_size,
                 side_info=c.side_info, beta=c.beta,
                 labels_for_accounting=c.labels_for_accounting,
-                record_trace=c.record_trace, edge_mode=c.edge_mode)
+                record_trace=c.record_trace, edge_mode=c.edge_mode,
+                controller_kwargs=ctl_kw)
         self._clock = clock if clock is not None else time.monotonic
         self._sched: Optional[RequestScheduler] = None
         if c.scheduler != "none":

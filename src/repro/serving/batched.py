@@ -251,7 +251,8 @@ class _BatchedSession:
     def __init__(self, runtime: EdgeCloudRuntime, params, cost: CostModel,
                  *, batch_size: int = 32, side_info: bool = False,
                  beta: float = 1.0, labels_for_accounting: bool = True,
-                 record_trace: bool = False, edge_mode: str = "bucketed"):
+                 record_trace: bool = False, edge_mode: str = "bucketed",
+                 controller_kwargs: Optional[Dict[str, Any]] = None):
         # lazy import: scan_edge imports OffloadQueue/_pad_rows from here
         from repro.serving.scan_edge import select_edge_phase
         self.runtime = runtime
@@ -262,7 +263,8 @@ class _BatchedSession:
         self.edge_mode = edge_mode
         self._edge_phase = select_edge_phase(edge_mode)
         self.labels_for_accounting = labels_for_accounting
-        self.ctl = SplitEEController(cost, beta=beta, side_info=side_info)
+        self.ctl = SplitEEController(cost, beta=beta, side_info=side_info,
+                                     **(controller_kwargs or {}))
         self.queue = OffloadQueue(runtime, params)
         self.correct: List[int] = []
         self.preds: List[int] = []
@@ -320,14 +322,17 @@ class _BatchedSession:
     def result(self) -> Dict[str, Any]:
         ctl = self.ctl
         hist = {k: np.asarray(v) for k, v in ctl.history.items()}
+        tot = ctl.totals
         out = {
             "n": self.n,
             "batch_size": self.batch_size,
             "preds": np.asarray(self.preds),
-            "cost_total": float(hist["cost"].sum()),
-            "offload_frac": (float(1.0 - hist["exited"].mean())
-                             if self.n else 0.0),
-            "offload_bytes": int(hist["offload_bytes"].sum()),
+            # scalar accounting comes from the controller's O(1)
+            # aggregates so it survives record_history=False
+            "cost_total": float(tot["cost"]),
+            "offload_frac": (1.0 - tot["exited"] / tot["served"]
+                             if tot["served"] else 0.0),
+            "offload_bytes": int(tot["offload_bytes"]),
             "arms": hist["arm"],
             "rewards": hist["reward"],
             "exited": hist["exited"],
@@ -346,12 +351,15 @@ def _serve_stream_batched(runtime: EdgeCloudRuntime, params, stream,
                           max_samples: int = 0,
                           labels_for_accounting: bool = True,
                           record_trace: bool = False,
-                          edge_mode: str = "bucketed") -> Dict[str, Any]:
+                          edge_mode: str = "bucketed",
+                          controller_kwargs: Optional[Dict[str, Any]] = None,
+                          ) -> Dict[str, Any]:
     """Offline driver: replay a finite stream through a batched session."""
     sess = _BatchedSession(runtime, params, cost, batch_size=batch_size,
                            side_info=side_info, beta=beta,
                            labels_for_accounting=labels_for_accounting,
-                           record_trace=record_trace, edge_mode=edge_mode)
+                           record_trace=record_trace, edge_mode=edge_mode,
+                           controller_kwargs=controller_kwargs)
     for batch in microbatches(stream, batch_size, max_samples):
         sess.push(batch)
     return sess.result()

@@ -799,7 +799,9 @@ def _serve_stream_distributed(runtime: EdgeCloudRuntime, params, stream,
                               heartbeat_interval: float = 0.25,
                               init_state: Optional[Dict[str, Any]] = None,
                               stream_offset: int = 0,
-                              record_states: bool = False) -> Dict[str, Any]:
+                              record_states: bool = False,
+                              controller_kwargs: Optional[Dict[str, Any]] = None,
+                              ) -> Dict[str, Any]:
     """Serve a sample stream across all processes of a jax.distributed run.
 
     Same contract as `serve_stream_sharded` — ``replicas`` is the
@@ -858,7 +860,8 @@ def _serve_stream_distributed(runtime: EdgeCloudRuntime, params, stream,
     params = jax.device_put(params,
                             param_shardings(mesh, params, axis_map=amap))
 
-    ctl = SplitEEController(cost, beta=beta, side_info=side_info)
+    ctl = SplitEEController(cost, beta=beta, side_info=side_info,
+                            **(controller_kwargs or {}))
     if init_state is not None:
         ctl.restore(init_state)
     queue = OffloadQueue(runtime, params, put=put)
@@ -912,8 +915,11 @@ def _serve_stream_distributed(runtime: EdgeCloudRuntime, params, stream,
         B = len(ctx.labels)
         # my slice's cloud results (slots are slice-local indices)
         conf_Ls, obs = _resolve_cloud(runtime, ctx)
+        # global stream position of the batch, agreed by every host (the
+        # controller's own counter lags it whenever slices were lost)
         shard = ctl.prepare_shard_update(ctx.arms, ctx.conf_paths,
-                                         conf_Ls, obs)
+                                         conf_Ls, obs,
+                                         round=stream_offset + ctx.start)
         payload = _pack_host_update(
             shard, np.asarray(ctx.batch_preds, np.int64))
         if ft:
@@ -936,7 +942,9 @@ def _serve_stream_distributed(runtime: EdgeCloudRuntime, params, stream,
                 kept += bhi - blo
             ctl.merge_cross_host(per_host)
             lost += B - kept
-            exchange.post_fold(state_to_bytes(ctl.state),
+            # snapshot (not raw state): a windowed controller's ring must
+            # ship with the KV state or a rejoiner could not evict
+            exchange.post_fold(state_to_bytes(ctl.snapshot()),
                                stream_offset + ctx.start + B)
         else:
             # host-side all-gather, then the identical fold everywhere

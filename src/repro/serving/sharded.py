@@ -195,14 +195,18 @@ def _serve_result(ctl: SplitEEController, *, n: int, batch_size: int,
                   overlapped: int) -> Dict[str, Any]:
     """Result dict shared by the sharded and distributed runtimes."""
     hist = {k: np.asarray(v) for k, v in ctl.history.items()}
+    tot = ctl.totals
     out = {
         "n": n,
         "batch_size": batch_size,
         "replicas": replicas,
         "preds": np.asarray(preds),
-        "cost_total": float(hist["cost"].sum()),
-        "offload_frac": float(1.0 - hist["exited"].mean()) if n else 0.0,
-        "offload_bytes": int(hist["offload_bytes"].sum()),
+        # scalar accounting comes from the controller's O(1) aggregates
+        # so it survives record_history=False
+        "cost_total": float(tot["cost"]),
+        "offload_frac": (1.0 - tot["exited"] / tot["served"]
+                         if tot["served"] else 0.0),
+        "offload_bytes": int(tot["offload_bytes"]),
         "arms": hist["arm"],
         "rewards": hist["reward"],
         "exited": hist["exited"],
@@ -233,7 +237,8 @@ class _ShardedSession:
                  mesh: Optional[Mesh] = None, overlap: bool = True,
                  overlap_depth: int = 1, side_info: bool = False,
                  beta: float = 1.0, labels_for_accounting: bool = True,
-                 record_trace: bool = False, edge_mode: str = "bucketed"):
+                 record_trace: bool = False, edge_mode: str = "bucketed",
+                 controller_kwargs: Optional[Dict[str, Any]] = None):
         from repro.serving.scan_edge import select_edge_phase
         if replicas < 1:
             raise ValueError(f"replicas must be >= 1, got {replicas}")
@@ -266,7 +271,8 @@ class _ShardedSession:
         self.params = jax.device_put(
             params, param_shardings(mesh, params, axis_map=amap))
 
-        self.ctl = SplitEEController(cost, beta=beta, side_info=side_info)
+        self.ctl = SplitEEController(cost, beta=beta, side_info=side_info,
+                                     **(controller_kwargs or {}))
         self.queue = OffloadQueue(runtime, self.params, put=self.put)
         self.correct: List[int] = []
         self.preds: List[int] = []
@@ -312,9 +318,12 @@ class _ShardedSession:
         for size in _shard_sizes(B, self.replicas):
             hi = lo + size
             if size:
+                # ctx.start is the batch's global stream position — with
+                # overlap the fold runs behind selection, so the
+                # controller's own round counter would lag the trace
                 shards.append(self.ctl.prepare_shard_update(
                     ctx.arms[lo:hi], ctx.conf_paths[lo:hi],
-                    conf_Ls[lo:hi], obs[lo:hi]))
+                    conf_Ls[lo:hi], obs[lo:hi], round=ctx.start))
             lo = hi
         self.ctl.merge_shard_updates(shards)
         self.preds.extend(ctx.batch_preds)
@@ -363,7 +372,9 @@ def _serve_stream_sharded(runtime: EdgeCloudRuntime, params, stream,
                           beta: float = 1.0, max_samples: int = 0,
                           labels_for_accounting: bool = True,
                           record_trace: bool = False,
-                          edge_mode: str = "bucketed") -> Dict[str, Any]:
+                          edge_mode: str = "bucketed",
+                          controller_kwargs: Optional[Dict[str, Any]] = None,
+                          ) -> Dict[str, Any]:
     """Offline driver: replay a finite stream through a sharded session.
 
     Same contract as `_serve_stream_batched`, plus:
@@ -388,7 +399,8 @@ def _serve_stream_sharded(runtime: EdgeCloudRuntime, params, stream,
                            overlap_depth=overlap_depth, side_info=side_info,
                            beta=beta,
                            labels_for_accounting=labels_for_accounting,
-                           record_trace=record_trace, edge_mode=edge_mode)
+                           record_trace=record_trace, edge_mode=edge_mode,
+                           controller_kwargs=controller_kwargs)
     for batch in microbatches(stream, batch_size, max_samples):
         sess.push(batch)
     sess.drain()

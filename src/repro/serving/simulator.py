@@ -20,7 +20,7 @@ SplitEE-S additionally reads the exits *below* depth; the runtime exposes
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -142,12 +142,14 @@ def _serve_stream_sequential(runtime: EdgeCloudRuntime, params, stream,
                              cost: CostModel, *, side_info: bool = False,
                              beta: float = 1.0, max_samples: int = 0,
                              labels_for_accounting: bool = True,
+                             controller_kwargs: Optional[Dict[str, Any]] = None,
                              ) -> Dict[str, Any]:
     """Stream samples through the online SplitEE controller + edge/cloud
     runtime. Unsupervised: labels (if present) are used only for reporting.
     """
     cfg = runtime.cfg
-    ctl = SplitEEController(cost, beta=beta, side_info=side_info)
+    ctl = SplitEEController(cost, beta=beta, side_info=side_info,
+                            **(controller_kwargs or {}))
     correct, preds = [], []
     n = 0
     for sample in stream:
@@ -182,13 +184,17 @@ def _serve_stream_sequential(runtime: EdgeCloudRuntime, params, stream,
         if max_samples and n >= max_samples:
             break
     hist = {k: np.asarray(v) for k, v in ctl.history.items()}
+    tot = ctl.totals
     out = {
         "n": n,
         "batch_size": 1,       # keeps the report shape uniform across paths
         "preds": np.asarray(preds),
-        "cost_total": float(hist["cost"].sum()),
-        "offload_frac": float(1.0 - hist["exited"].mean()),
-        "offload_bytes": int(hist["offload_bytes"].sum()),
+        # scalar accounting from the controller's O(1) aggregates, so
+        # record_history=False long streams still report correctly
+        "cost_total": float(tot["cost"]),
+        "offload_frac": (1.0 - tot["exited"] / tot["served"]
+                         if tot["served"] else 0.0),
+        "offload_bytes": int(tot["offload_bytes"]),
         "arms": hist["arm"],
         "rewards": hist["reward"],
         "exited": hist["exited"],

@@ -1,0 +1,188 @@
+"""Property tests for the NON-STATIONARY controllers' merge algebra.
+
+`tests/test_merge_properties.py` pins the stationary fold; the windowed
+and discounted modes add state (a ring of per-batch blocks, a per-sample
+decay) whose interaction with sharded/distributed merging has its own
+algebra:
+
+* **windowed, pre-eviction** — while the ring holds at most `window`
+  blocks, the incremental (q, n) update is the stationary one, so any
+  contiguous grouping of a shard sequence folds bit-identically.
+* **windowed, cross-host == flat** — `merge_cross_host` flattens hosts
+  into ONE `merge_shard_updates` call, i.e. one ring block; it is exactly
+  equal (state AND ring) to the flat merge, at any window size.
+* **windowed, eviction == sequential replay** — after eviction the state
+  is recomputed from the surviving blocks; it must be bit-identical to a
+  fresh controller that only ever folded those surviving blocks. This is
+  what makes a rejoined host's windowed state equal the survivors'.
+* **discounted** — the decay is applied per sample inside the fold, so
+  contiguous grouping invariance is bitwise at any gamma.
+* **degeneracy** — `window=0` and `discount=1.0` ARE the stationary
+  controller, bitwise, through the same merge entry points.
+
+Runs under real `hypothesis` when available, else the vendored
+deterministic fallback.
+"""
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                  # pragma: no cover
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import CostModel, SplitEEController
+
+from test_merge_properties import (_assert_states_bitwise, _grouping,
+                                   _random_shards)
+
+
+def _fold(cost, side_info, groups, **kwargs):
+    """Fresh controller (any mode) folding one merge call per group."""
+    ctl = SplitEEController(cost, side_info=side_info, **kwargs)
+    for g in groups:
+        ctl.merge_shard_updates(list(g))
+    return ctl
+
+
+def _assert_rings_equal(a: SplitEEController, b: SplitEEController):
+    assert len(a._ring) == len(b._ring)
+    for (arms_a, rew_a), (arms_b, rew_b) in zip(a._ring, b._ring):
+        np.testing.assert_array_equal(arms_a, arms_b)
+        np.testing.assert_array_equal(rew_a, rew_b)
+
+
+@given(st.integers(0, 10**6), st.integers(2, 6), st.integers(1, 6))
+@settings(max_examples=15, deadline=None)
+def test_windowed_grouping_invariant_pre_eviction(seed, L, n_shards):
+    """While no block is evicted, a windowed fold over any contiguous
+    grouping is bit-identical to the single flat fold (groupings produce
+    different ring *blocks*, but the same incremental state)."""
+    side_info = bool(seed % 2)
+    cost, shards = _random_shards(seed, L, n_shards, side_info)
+    kw = dict(mode="sliding_window", window=n_shards + 1)
+    ref = _fold(cost, side_info, [shards], **kw)
+    got = _fold(cost, side_info, _grouping(shards, seed + 1), **kw)
+    _assert_states_bitwise(ref, got)
+    assert ref.history == got.history
+
+
+@given(st.integers(0, 10**6), st.integers(2, 6), st.integers(1, 6))
+@settings(max_examples=15, deadline=None)
+def test_windowed_cross_host_equals_flat_merge(seed, L, n_shards):
+    """`merge_cross_host` flattens hosts into one merge call == one ring
+    block; it equals the flat merge exactly — state AND ring — even at
+    window sizes where groupings would have diverged."""
+    side_info = bool(seed % 2)
+    cost, shards = _random_shards(seed, L, n_shards, side_info)
+    kw = dict(mode="sliding_window", window=1)
+    ref = _fold(cost, side_info, [shards], **kw)
+    got = SplitEEController(cost, side_info=side_info, **kw)
+    exited = got.merge_cross_host(_grouping(shards, seed + 2))
+    _assert_states_bitwise(ref, got)
+    _assert_rings_equal(ref, got)
+    assert ref.history == got.history
+    assert exited.shape == (sum(len(s.arms) for s in shards),)
+
+
+@given(st.integers(0, 10**6), st.integers(2, 6), st.integers(3, 8))
+@settings(max_examples=15, deadline=None)
+def test_window_eviction_equals_sequential_replay(seed, L, n_groups):
+    """After eviction, the windowed (q, n) equal a FRESH controller that
+    only ever saw the surviving blocks — the rejoin-path condition. The
+    round counter t stays monotone (it counts all served samples)."""
+    side_info = bool(seed % 2)
+    window = 2
+    cost, shards = _random_shards(seed, L, n_groups, side_info)
+    groups = [[s] for s in shards]           # one block per merge call
+    full = _fold(cost, side_info, groups,
+                 mode="sliding_window", window=window)
+    assert len(full._ring) <= window
+    survivors = groups[-len(full._ring):] if full._ring else []
+    replay = _fold(cost, side_info, survivors,
+                   mode="sliding_window", window=window)
+    np.testing.assert_array_equal(np.asarray(full.state.q),
+                                  np.asarray(replay.state.q))
+    np.testing.assert_array_equal(np.asarray(full.state.n),
+                                  np.asarray(replay.state.n))
+    _assert_rings_equal(full, replay)
+    assert int(full.state.t) == sum(len(s.arms) for s in shards)
+    # dtype of the replayed state matches the incremental one
+    assert (np.asarray(full.state.q).dtype
+            == np.asarray(replay.state.q).dtype)
+
+
+@given(st.integers(0, 10**6), st.integers(2, 6), st.integers(1, 6))
+@settings(max_examples=15, deadline=None)
+def test_discounted_grouping_invariant_bitwise(seed, L, n_shards):
+    """The decay multiplies n per SAMPLE, not per merge call, so any
+    contiguous grouping folds bit-identically at any gamma."""
+    side_info = bool(seed % 2)
+    gamma = 0.9 + 0.1 * ((seed % 10) / 10.0)        # in (0, 1]
+    cost, shards = _random_shards(seed, L, n_shards, side_info)
+    kw = dict(mode="discounted", discount=gamma)
+    ref = _fold(cost, side_info, [shards], **kw)
+    got = _fold(cost, side_info, _grouping(shards, seed + 1), **kw)
+    _assert_states_bitwise(ref, got)
+    assert ref.history == got.history
+
+
+@given(st.integers(0, 10**6), st.integers(2, 6), st.integers(1, 6))
+@settings(max_examples=15, deadline=None)
+def test_degenerate_modes_equal_stationary_bitwise(seed, L, n_shards):
+    """`sliding_window, window=0` and `discounted, discount=1.0` are the
+    stationary controller, bitwise, through the same merges."""
+    side_info = bool(seed % 2)
+    cost, shards = _random_shards(seed, L, n_shards, side_info)
+    groups = _grouping(shards, seed + 4)
+    ref = _fold(cost, side_info, groups)
+    for kw in (dict(mode="sliding_window", window=0),
+               dict(mode="discounted", discount=1.0)):
+        got = _fold(cost, side_info, groups, **kw)
+        _assert_states_bitwise(ref, got)
+        assert ref.history == got.history
+        assert got._ring == []
+
+
+def test_windowed_snapshot_roundtrip_through_eviction():
+    """state_to_bytes/state_from_bytes carry the ring: a restored windowed
+    controller evolves bit-identically to the donor through subsequent
+    folds INCLUDING an eviction-triggered replay."""
+    from repro.core import state_from_bytes, state_to_bytes
+    cost = CostModel(num_layers=3, alpha=0.6, offload=3.0)
+    _, shards = _random_shards(11, 3, 6, False)
+    donor = SplitEEController(cost, mode="sliding_window", window=3)
+    for s in shards[:2]:
+        donor.merge_shard_updates([s])
+    blob = state_to_bytes(donor.snapshot())
+    clone = SplitEEController(cost, mode="sliding_window", window=3)
+    clone.restore(state_from_bytes(blob))
+    _assert_states_bitwise(donor, clone)
+    _assert_rings_equal(donor, clone)
+    for s in shards[2:]:                     # crosses the window boundary
+        donor.merge_shard_updates([s])
+        clone.merge_shard_updates([s])
+    assert len(donor._ring) == 3             # eviction actually happened
+    _assert_states_bitwise(donor, clone)
+    _assert_rings_equal(donor, clone)
+    assert (np.asarray(donor.state.q).dtype
+            == np.asarray(clone.state.q).dtype)
+
+
+def test_stationary_snapshot_has_no_ring_key():
+    """Stationary snapshots/blobs are byte-compatible with pre-ring
+    consumers: no ring entry is written, and restoring one into a
+    windowed controller clears its ring."""
+    from repro.core import state_from_bytes, state_to_bytes
+    cost = CostModel(num_layers=3, alpha=0.6, offload=3.0)
+    _, shards = _random_shards(13, 3, 2, False)
+    stat = SplitEEController(cost)
+    stat.merge_shard_updates(shards)
+    snap = stat.snapshot()
+    assert "ring" not in snap
+    restored = state_from_bytes(state_to_bytes(snap))
+    assert "ring" not in restored
+    windowed = SplitEEController(cost, mode="sliding_window", window=2)
+    windowed.merge_shard_updates(shards)
+    assert windowed._ring
+    windowed.restore(restored)
+    assert windowed._ring == []

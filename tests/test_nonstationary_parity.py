@@ -1,0 +1,231 @@
+"""Differential parity for the non-stationary serving configs.
+
+The degenerate corners of the new controller modes are DEFINED to be the
+stationary controller — `sliding_window` with `window=0` (unbounded) and
+`discounted` with `discount=1.0` run the very same fold arithmetic — so
+the facade must produce bit-identical reports (arms, preds, rewards,
+exited, cost totals, state q/n/t) on every serving path:
+
+* sequential and batched (B in {1, 8}) in-process;
+* loopback distributed (single-process exchange) in-process;
+* sharded R=2 in a subprocess with forced host devices (the in-process
+  test session is pinned to one device by conftest).
+
+A constant `cost_trace` whose base equals the static offload is likewise
+bit-identical to serving with no trace, and `record_history=False` must
+change ONLY the per-sample history arrays (empty), never the scalar
+accounting or the controller state — the memory-free long-stream mode.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import CostModel
+from repro.data import OnlineStream, make_dataset
+from repro.data.synthetic import VOCAB
+from repro.serving import (EdgeCloudRuntime, ServingConfig, serve)
+
+DEGENERATE = [
+    pytest.param(dict(controller_mode="sliding_window", window=0),
+                 id="window-unbounded"),
+    pytest.param(dict(controller_mode="discounted", discount=1.0),
+                 id="discount-one"),
+]
+
+
+@pytest.fixture(scope="module")
+def served():
+    import jax
+    from repro.models.api import build_model
+    base = get_smoke_config("elasticbert12")
+    cfg = dataclasses.replace(
+        base, num_layers=3, d_model=32, num_heads=2, num_kv_heads=2,
+        d_ff=128, vocab_size=VOCAB, num_classes=2, dtype="float32")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    eval_data = make_dataset("imdb_like", 160, seed=2, seq_len=16)
+    rt = EdgeCloudRuntime(cfg)
+    cost = CostModel(num_layers=cfg.num_layers, alpha=0.6, offload=3.0)
+    return cfg, params, rt, cost, eval_data
+
+
+def _assert_bit_identical(got, ref):
+    assert got["n"] == ref["n"]
+    np.testing.assert_array_equal(got["arms"], ref["arms"])
+    np.testing.assert_array_equal(got["preds"], ref["preds"])
+    np.testing.assert_array_equal(got["rewards"], ref["rewards"])
+    np.testing.assert_array_equal(got["exited"], ref["exited"])
+    assert got["cost_total"] == ref["cost_total"]
+    assert got["offload_bytes"] == ref["offload_bytes"]
+    assert got["offload_frac"] == ref["offload_frac"]
+    assert got.get("accuracy") == ref.get("accuracy")
+    np.testing.assert_array_equal(got["state"]["q"], ref["state"]["q"])
+    np.testing.assert_array_equal(got["state"]["n"], ref["state"]["n"])
+    assert got["state"]["t"] == ref["state"]["t"]
+
+
+# ---------------------------------------------- degenerate == stationary
+
+@pytest.mark.parametrize("deg", DEGENERATE)
+def test_degenerate_equals_stationary_sequential(served, deg):
+    _, params, rt, cost, eval_data = served
+    ref = serve(rt, params, OnlineStream(eval_data, seed=0), cost,
+                ServingConfig(max_samples=48))
+    got = serve(rt, params, OnlineStream(eval_data, seed=0), cost,
+                ServingConfig(max_samples=48, **deg))
+    assert got.path == "sequential"
+    _assert_bit_identical(got, ref)
+
+
+@pytest.mark.parametrize("deg", DEGENERATE)
+@pytest.mark.parametrize("batch_size", [1, 8])
+def test_degenerate_equals_stationary_batched(served, deg, batch_size):
+    _, params, rt, cost, eval_data = served
+    kw = dict(batch_size=batch_size, max_samples=80)
+    if batch_size == 1:          # B=1 auto-resolves to sequential; pin it
+        kw["path"] = "batched"
+    ref = serve(rt, params, OnlineStream(eval_data, seed=0), cost,
+                ServingConfig(**kw))
+    got = serve(rt, params, OnlineStream(eval_data, seed=0), cost,
+                ServingConfig(**kw, **deg))
+    assert got.path == "batched"
+    _assert_bit_identical(got, ref)
+
+
+@pytest.mark.parametrize("deg", DEGENERATE)
+def test_degenerate_equals_stationary_distributed_loopback(served, deg):
+    _, params, rt, cost, eval_data = served
+    kw = dict(distributed=True, batch_size=16, overlap=True,
+              overlap_depth=2, max_samples=80)
+    ref = serve(rt, params, OnlineStream(eval_data, seed=0), cost,
+                ServingConfig(**kw))
+    got = serve(rt, params, OnlineStream(eval_data, seed=0), cost,
+                ServingConfig(**kw, **deg))
+    assert got.path == "distributed"
+    _assert_bit_identical(got, ref)
+
+
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import dataclasses
+    import jax
+    import numpy as np
+    from repro.configs import get_smoke_config
+    from repro.core import CostModel
+    from repro.data import OnlineStream, make_dataset
+    from repro.data.synthetic import VOCAB
+    from repro.models.api import build_model
+    from repro.serving import EdgeCloudRuntime, ServingConfig, serve
+
+    assert len(jax.devices()) == 4, jax.devices()
+    base = get_smoke_config("elasticbert12")
+    cfg = dataclasses.replace(
+        base, num_layers=3, d_model=32, num_heads=2, num_kv_heads=2,
+        d_ff=128, vocab_size=VOCAB, num_classes=2, dtype="float32")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    eval_data = make_dataset("imdb_like", 128, seed=2, seq_len=16)
+    rt = EdgeCloudRuntime(cfg)
+    cost = CostModel(num_layers=cfg.num_layers, alpha=0.6, offload=3.0)
+    kw = dict(path="sharded", batch_size=16, replicas=2, overlap=False,
+              max_samples=96)
+    ref = serve(rt, params, OnlineStream(eval_data, seed=0), cost,
+                ServingConfig(**kw))
+    for deg in (dict(controller_mode="sliding_window", window=0),
+                dict(controller_mode="discounted", discount=1.0)):
+        got = serve(rt, params, OnlineStream(eval_data, seed=0), cost,
+                    ServingConfig(**kw, **deg))
+        assert got["n"] == ref["n"]
+        np.testing.assert_array_equal(got["arms"], ref["arms"])
+        np.testing.assert_array_equal(got["preds"], ref["preds"])
+        np.testing.assert_array_equal(got["rewards"], ref["rewards"])
+        np.testing.assert_array_equal(got["exited"], ref["exited"])
+        assert got["cost_total"] == ref["cost_total"]
+        assert got["offload_bytes"] == ref["offload_bytes"]
+        np.testing.assert_array_equal(got["state"]["q"],
+                                      ref["state"]["q"])
+        np.testing.assert_array_equal(got["state"]["n"],
+                                      ref["state"]["n"])
+        assert got["state"]["t"] == ref["state"]["t"]
+    print("NONSTAT_SHARDED_OK")
+""")
+
+
+def test_degenerate_equals_stationary_sharded_r2_subprocess():
+    """R=2 sharded serving with each degenerate mode reproduces the
+    stationary R=2 run bitwise. Subprocess because the forced device
+    count must precede jax init (conftest pins one device here)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=4").strip()
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "NONSTAT_SHARDED_OK" in proc.stdout
+
+
+# ----------------------------------------------- trace / history parity
+
+def test_constant_trace_equals_static_offload(served):
+    """A constant CostTrace at the static offload price changes nothing:
+    the trace lookup feeds the same float into the same arithmetic."""
+    _, params, rt, cost, eval_data = served
+    kw = dict(batch_size=8, max_samples=80)
+    ref = serve(rt, params, OnlineStream(eval_data, seed=0), cost,
+                ServingConfig(**kw))
+    got = serve(rt, params, OnlineStream(eval_data, seed=0), cost,
+                ServingConfig(cost_trace={"kind": "constant",
+                                          "base": cost.offload}, **kw))
+    _assert_bit_identical(got, ref)
+
+
+@pytest.mark.parametrize("path_kw", [
+    pytest.param(dict(max_samples=48), id="sequential"),
+    pytest.param(dict(batch_size=8, max_samples=160), id="batched"),
+])
+def test_record_history_off_keeps_scalars_drops_arrays(served, path_kw):
+    """`record_history=False` (the memory-free long-stream mode) must not
+    change predictions, scalar accounting, or controller state — only the
+    per-sample history arrays, which stay empty however long the stream."""
+    _, params, rt, cost, eval_data = served
+    ref = serve(rt, params, OnlineStream(eval_data, seed=0), cost,
+                ServingConfig(**path_kw))
+    got = serve(rt, params, OnlineStream(eval_data, seed=0), cost,
+                ServingConfig(record_history=False, **path_kw))
+    assert got["n"] == ref["n"]
+    np.testing.assert_array_equal(got["preds"], ref["preds"])
+    assert got["cost_total"] == ref["cost_total"]
+    assert got["offload_bytes"] == ref["offload_bytes"]
+    assert got["offload_frac"] == ref["offload_frac"]
+    assert got.get("accuracy") == ref.get("accuracy")
+    np.testing.assert_array_equal(got["state"]["q"], ref["state"]["q"])
+    np.testing.assert_array_equal(got["state"]["n"], ref["state"]["n"])
+    assert got["state"]["t"] == ref["state"]["t"]
+    for key in ("arms", "rewards", "exited"):
+        assert np.asarray(got[key]).size == 0      # nothing accumulated
+        assert np.asarray(ref[key]).size == ref["n"]
+
+
+# ------------------------------------------------- config validation
+
+@pytest.mark.parametrize("kwargs,needle", [
+    (dict(controller_mode="bogus"), "controller_mode"),
+    (dict(window=-1), "window"),
+    (dict(window=8), "window"),                    # needs sliding_window
+    (dict(controller_mode="discounted", discount=0.0), "discount"),
+    (dict(controller_mode="discounted", discount=1.5), "discount"),
+    (dict(discount=0.9), "discount"),              # needs discounted
+    (dict(cost_trace={"kind": "bogus"}), "cost_trace"),
+    (dict(cost_trace={"kind": "steps", "times": [5], "values": [1.0]}),
+     "cost_trace"),
+])
+def test_nonstationary_config_validation(kwargs, needle):
+    with pytest.raises(ValueError) as exc:
+        ServingConfig(**kwargs)
+    assert needle in str(exc.value)

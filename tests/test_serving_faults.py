@@ -276,18 +276,18 @@ def test_rejoin_handshake(tmp_path):
 # worker (including host 0) can die without taking the transport along.
 
 _FT_WORKER = """
-import base64, dataclasses, io, itertools, json, os
+import base64, dataclasses, itertools, json, os
 import numpy as np
 from repro.serving import ft_serving_context
 exchange, init_state, skip = ft_serving_context(
     heartbeat_timeout=float(os.environ.get("TEST_HB_TIMEOUT", "3.0")))
 import jax
 from repro.configs import get_smoke_config
-from repro.core import CostModel, state_from_bytes
+from repro.core import CostModel, state_from_bytes, state_to_bytes
 from repro.data import OnlineStream, make_dataset
 from repro.data.synthetic import VOCAB
 from repro.models.api import build_model
-from repro.serving import EdgeCloudRuntime, serve_stream_distributed
+from repro.serving import EdgeCloudRuntime, ServingConfig, serve
 
 sb64 = os.environ.get("TEST_INIT_STATE_B64")
 if sb64:
@@ -309,15 +309,17 @@ cost = CostModel(num_layers=cfg.num_layers, alpha=0.6, offload=3.0)
 stream = iter(OnlineStream(eval_data, seed=0))
 if skip:
     stream = itertools.islice(stream, skip, None)
-out = serve_stream_distributed(
-    rt, params, stream, cost, batch_size=batch, max_samples=max_samples,
-    replicas=1, overlap=False, exchange=exchange, init_state=init_state,
-    stream_offset=skip, record_states=True)
+config = ServingConfig(
+    path="distributed", batch_size=batch, max_samples=max_samples,
+    replicas=1, overlap=False, record_states=True,
+    controller_mode=os.environ.get("TEST_CONTROLLER_MODE", "stationary"),
+    window=int(os.environ.get("TEST_WINDOW", "0")))
+out = serve(rt, params, stream, cost, config, exchange=exchange,
+            init_state=init_state, stream_offset=skip)
 
 def snap_b64(s):
-    buf = io.BytesIO()
-    np.savez(buf, q=s["q"], n=s["n"], t=np.asarray(s["t"], np.int64))
-    return base64.b64encode(buf.getvalue()).decode()
+    # full snapshot: a windowed controller's ring rides along
+    return base64.b64encode(state_to_bytes(s)).decode()
 
 print("RESULT " + json.dumps({
     "host": out["distributed"]["host_id"], "n": out["n"], "skip": skip,
@@ -412,6 +414,87 @@ def test_killed_worker_invariant_3_to_2(tmp_path):
     assert a0["arms"][-48:] == b0["arms"]
     assert a0["rewards"][-48:] == b0["rewards"]
     assert a0["exited"][-48:] == b0["exited"]
+    assert a0["q"] == b0["q"] and a0["n_state"] == b0["n_state"]
+    assert a0["t"] == b0["t"]
+
+
+def test_window_ring_survives_state_bytes_roundtrip():
+    """The wire format the rejoin ack ships (`state_to_bytes`) must carry
+    the sliding window's ring exactly: a restored windowed controller is
+    indistinguishable from the donor, including the eviction replay."""
+    import numpy as np
+    from repro.core import (CostModel, SplitEEController, state_from_bytes,
+                            state_to_bytes)
+    rng = np.random.default_rng(5)
+    cost = CostModel(num_layers=4, alpha=0.6, offload=3.0)
+    donor = SplitEEController(cost, mode="sliding_window", window=2)
+    for _ in range(3):
+        arms = rng.integers(0, 4, 6)
+        paths = [np.asarray([rng.uniform(0.1, 0.95)]) for _ in arms]
+        conf_L = [None if rng.random() < 0.5 else 0.8 for _ in arms]
+        donor.update_batch(arms, paths, conf_L, [0] * len(arms))
+    snap = state_from_bytes(state_to_bytes(donor.snapshot()))
+    assert len(snap["ring"]) == 2                 # eviction happened
+    clone = SplitEEController(cost, mode="sliding_window", window=2)
+    clone.restore(snap)
+    for a, b in zip(donor._ring, clone._ring):
+        np.testing.assert_array_equal(a[0], b[0])
+        np.testing.assert_array_equal(a[1], b[1])
+    arms = rng.integers(0, 4, 6)
+    paths = [np.asarray([rng.uniform(0.1, 0.95)]) for _ in arms]
+    conf_L = [None] * len(arms)
+    donor.update_batch(arms, paths, conf_L, [0] * len(arms))
+    clone.update_batch(arms, paths, conf_L, [0] * len(arms))
+    np.testing.assert_array_equal(np.asarray(donor.state.q),
+                                  np.asarray(clone.state.q))
+    np.testing.assert_array_equal(np.asarray(donor.state.n),
+                                  np.asarray(clone.state.n))
+    assert int(donor.state.t) == int(clone.state.t)
+
+
+def test_killed_worker_invariant_windowed_3_to_2(tmp_path):
+    """The 3->2 acceptance invariant for the SLIDING-WINDOW controller:
+    the merged state shipped at the failure epoch includes the window
+    ring (via `state_to_bytes`), so a smaller cluster seeded from it
+    evolves bit-identically — through evictions — to the survivors."""
+    hb_timeout = 3.0
+    windowed = {"TEST_CONTROLLER_MODE": "sliding_window",
+                "TEST_WINDOW": 2}
+    env_a = _cluster_env(str(tmp_path / "kv-a"),
+                         SPLITEE_FAULTS="kill:host=1,epoch=3",
+                         TEST_MAX_SAMPLES=96, TEST_HB_TIMEOUT=hb_timeout,
+                         **windowed)
+    rep = run_supervised_cluster(_FT_WORKER, 3, env=env_a,
+                                 coordinator=False, fail_fast=False,
+                                 timeout=240)
+    assert rep.completed[1].returncode == FAULT_KILL_EXIT
+    res = _parse_results(rep.completed, skip_slots={1})
+    a0, a2 = res[0], res[2]
+    assert a0["states"] == a2["states"]           # survivors' mirrors
+    assert a0["q"] == a2["q"] and a0["t"] == a2["t"]
+
+    # the epoch-3 snapshot carries the ring (window=2, >=4 folds by then)
+    z = np.load(io.BytesIO(base64.b64decode(a0["states"][3])))
+    assert int(z["ring_len"]) == 2
+
+    env_b = _cluster_env(str(tmp_path / "kv-b"), TEST_MAX_SAMPLES=96,
+                         TEST_INIT_STATE_B64=a0["states"][3], TEST_SKIP=48,
+                         TEST_HB_TIMEOUT=hb_timeout, **windowed)
+    rep_b = run_supervised_cluster(_FT_WORKER, 2, env=env_b,
+                                   coordinator=False, timeout=240)
+    b0 = _parse_results(rep_b.completed)[0]
+
+    # bit-identical windowed evolution from epoch 4 on — every later
+    # fold evicts a block and replays the ring, so this exercises the
+    # replay arithmetic, not just the incremental path
+    for r in range(4):
+        qa, na, ta = _unsnap(a0["states"][4 + r])
+        qb, nb, tb = _unsnap(b0["states"][r])
+        np.testing.assert_array_equal(qa, qb)
+        np.testing.assert_array_equal(na, nb)
+        assert ta == tb
+    assert a0["preds"][48:] == b0["preds"]
+    assert a0["arms"][-48:] == b0["arms"]
     assert a0["q"] == b0["q"] and a0["n_state"] == b0["n_state"]
     assert a0["t"] == b0["t"]
 
