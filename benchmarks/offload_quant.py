@@ -1,0 +1,155 @@
+"""Quantized-offload frontier: accuracy vs communication cost per codec.
+
+Serves the same trained checkpoint and eval stream once per codec
+setting (none / int8 / int4, each dense and sparsified) through the
+batched runtime and records the accuracy/cost frontier:
+
+    bytes_per_offload   wire bytes actually shipped per offloaded sample
+    byte_reduction      raw-payload bytes over wire bytes (per offload)
+    accuracy_drop       vs the uncompressed run (absolute)
+    cost_total          the controller's charged cost (the codec scales
+                        the communication term o for every arm)
+
+Acceptance pins (checked here, on the TRAINED testbed): int8 ships
+>= 2x fewer bytes per offload than the raw payload and costs < 1%
+absolute accuracy. Totals are deliberately NOT the pin — cheaper
+communication makes the bandit offload more, which is the codec working.
+
+Results go to ``BENCH_offload_quant.json`` (schema in
+benchmarks/README.md).
+
+    PYTHONPATH=src:. python benchmarks/offload_quant.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import CostModel
+from repro.data import OnlineStream, make_dataset
+from repro.data.synthetic import VOCAB
+from repro.launch.train import train_classifier
+from repro.serving import EdgeCloudRuntime, ServingConfig, serve
+from repro.serving.offload_codec import OffloadCodec
+
+SEQ_LEN = 32
+BATCH = 16
+
+CODECS = [
+    {"offload_quant": "none", "offload_sparsity": 0.0},    # baseline
+    {"offload_quant": "int8", "offload_sparsity": 0.0},
+    {"offload_quant": "int4", "offload_sparsity": 0.0},
+    {"offload_quant": "int8", "offload_sparsity": 0.5},
+    {"offload_quant": "int4", "offload_sparsity": 0.5},
+]
+
+
+def build(layers: int, steps: int, seed: int = 0):
+    base = get_smoke_config("elasticbert12")
+    cfg = dataclasses.replace(
+        base, num_layers=layers, d_model=64, num_heads=2, num_kv_heads=2,
+        d_ff=256, vocab_size=VOCAB, num_classes=2, dtype="float32")
+    train = make_dataset("sst2_like", 2048, seed=seed, seq_len=SEQ_LEN)
+    params, _, _ = train_classifier(cfg, train, steps=steps, batch_size=64,
+                                    seed=seed)
+    return cfg, params
+
+
+def run(samples: int = 768, layers: int = 4, steps: int = 120,
+        check: bool = True, print_csv: bool = True,
+        out_path: str = "BENCH_offload_quant.json"):
+    cfg, params = build(layers, steps)
+    eval_data = make_dataset("imdb_like", max(2 * samples, 256), seed=2,
+                             seq_len=SEQ_LEN)
+    # alpha high enough that a meaningful share of the stream offloads
+    cost = CostModel(num_layers=cfg.num_layers, alpha=0.9, offload=3.0)
+    rt = EdgeCloudRuntime(cfg)
+    itemsize = np.dtype(cfg.dtype).itemsize
+    raw_row = SEQ_LEN * cfg.d_model * itemsize
+
+    rows, base = [], None
+    for codec_kw in CODECS:
+        scfg = ServingConfig(path="batched", batch_size=BATCH,
+                             max_samples=samples, **codec_kw)
+        out = serve(rt, params, OnlineStream(eval_data, seed=0), cost, scfg)
+        offloads = int(out["n"] - np.sum(out["exited"]))
+        per = out["offload_bytes"] / max(offloads, 1)
+        codec = OffloadCodec(codec_kw["offload_quant"],
+                             codec_kw["offload_sparsity"])
+        row = {
+            **codec_kw,
+            "n": int(out["n"]),
+            "accuracy": round(float(out["accuracy"]), 4),
+            "cost_total": round(float(out["cost_total"]), 2),
+            "offload_frac": round(float(out["offload_frac"]), 3),
+            "offload_bytes": int(out["offload_bytes"]),
+            "bytes_per_offload": round(per, 1),
+            "byte_reduction": round(raw_row / per, 2) if offloads else None,
+            "cost_ratio": round(codec.cost_ratio(SEQ_LEN, cfg.d_model,
+                                                 itemsize), 4),
+        }
+        if base is None:
+            base = row
+        row["accuracy_drop"] = round(base["accuracy"] - row["accuracy"], 4)
+        rows.append(row)
+        if print_csv:
+            print(f"offload_quant/{row['offload_quant']}"
+                  f"/sp={row['offload_sparsity']},"
+                  f"acc={row['accuracy']:.3f},"
+                  f"drop={row['accuracy_drop']:+.3f},"
+                  f"cost={row['cost_total']:.0f},"
+                  f"bytes/offload={row['bytes_per_offload']:.0f},"
+                  f"reduction={row['byte_reduction']}x,"
+                  f"offload_frac={row['offload_frac']:.2f}")
+
+    if check:
+        int8 = next(r for r in rows if r["offload_quant"] == "int8"
+                    and r["offload_sparsity"] == 0.0)
+        assert int8["byte_reduction"] >= 2.0, \
+            f"int8 byte reduction {int8['byte_reduction']} < 2x"
+        assert int8["accuracy_drop"] < 0.01, \
+            f"int8 accuracy drop {int8['accuracy_drop']} >= 1%"
+        print("offload_quant/acceptance,ok,int8>=2x-bytes,<1%-acc-drop")
+
+    if out_path:
+        artifact = {
+            "benchmark": "offload_quant",
+            "config": {"samples": samples, "layers": layers,
+                       "steps": steps, "seq_len": SEQ_LEN,
+                       "batch_size": BATCH, "d_model": cfg.d_model,
+                       "alpha": cost.alpha, "offload": cost.offload,
+                       "raw_row_bytes": raw_row},
+            "frontier": rows,
+        }
+        with open(out_path, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"wrote {out_path}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=768)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run for CI: few samples/steps, pins still "
+                         "checked except the accuracy one (too noisy "
+                         "under-trained)")
+    ap.add_argument("--out", default="BENCH_offload_quant.json",
+                    help="JSON artifact path ('' disables)")
+    args = ap.parse_args()
+    check = True
+    if args.smoke:
+        args.samples, args.steps = 96, 5
+        check = False                  # byte pins live in the test suite
+    run(samples=args.samples, layers=args.layers, steps=args.steps,
+        check=check, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -264,7 +264,8 @@ class SplitEEController:
                              conf_paths: Sequence[np.ndarray],
                              conf_Ls: Sequence[Optional[float]],
                              offload_bytes: Sequence[int],
-                             round: Optional[int] = None) -> ShardUpdate:
+                             round: Optional[int] = None,
+                             offload_scale: float = 1.0) -> ShardUpdate:
         """Summarize one replica's shard of a micro-batch — pure.
 
         Rewards for all B_r samples (and, with side information, all
@@ -279,10 +280,19 @@ class SplitEEController:
         Pipelined/fault-tolerant drivers must pass it explicitly — the
         default (the controller's round counter) is only correct when
         folds land in stream order and no samples were lost.
+
+        ``offload_scale`` multiplies the communication term ``o`` for
+        every arm (served and counterfactual): with a quantized offload
+        codec it is the deterministic wire-bytes / full-dtype-bytes ratio,
+        so the bandit optimizes the cost actually paid. The multiply is
+        skipped entirely at the default 1.0, keeping the codec-free path
+        bit-identical.
         """
         L = self.cost.num_layers
         B = len(arms)
         offload = self._offload_at(round)
+        if offload_scale != 1.0:
+            offload = offload * float(offload_scale)
         arms = np.asarray(arms, np.int64)
         conf = np.zeros((B, L), np.float64)
         conf_i = np.empty(B, np.float64)
@@ -420,7 +430,8 @@ class SplitEEController:
                      conf_paths: Sequence[np.ndarray],
                      conf_Ls: Sequence[Optional[float]],
                      offload_bytes: Sequence[int],
-                     round: Optional[int] = None) -> np.ndarray:
+                     round: Optional[int] = None,
+                     offload_scale: float = 1.0) -> np.ndarray:
         """Apply one micro-batch of delayed-feedback updates.
 
         Implemented as prepare-then-merge of a single shard, so the
@@ -428,12 +439,14 @@ class SplitEEController:
         Returns the per-sample exit decisions.
         """
         return self.merge_shard_updates([self.prepare_shard_update(
-            arms, conf_paths, conf_Ls, offload_bytes, round=round)])
+            arms, conf_paths, conf_Ls, offload_bytes, round=round,
+            offload_scale=offload_scale)])
 
     def update(self, arm: int, conf_path: np.ndarray, conf_L: Optional[float],
-               offload_bytes: int = 0):
+               offload_bytes: int = 0, offload_scale: float = 1.0):
         """conf_path: confidences observed on-device (length arm+1 for
         SplitEE-S, or just [C_arm] for SplitEE). conf_L: final-layer
         confidence if the sample was offloaded, else None."""
         return bool(self.update_batch(
-            [arm], [conf_path], [conf_L], [offload_bytes])[0])
+            [arm], [conf_path], [conf_L], [offload_bytes],
+            offload_scale=offload_scale)[0])

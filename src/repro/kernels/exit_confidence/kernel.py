@@ -10,6 +10,17 @@ sample, so HBM traffic is O(B*D + D*V) reads and O(B) writes.
 Grid: (num_b_tiles, num_v_tiles); the vocab axis is innermost, so for a
 fixed batch tile the vocab sweep is sequential and the running stats live
 in VMEM scratch across grid steps (TPU grid iteration is sequential).
+
+Two variants share the online-softmax update (`_online_update`):
+
+* `exit_confidence_pallas`   — h is the already-normed pooled hidden.
+* `exit_confidence_fused_pallas` — the fused exit epilogue: takes the RAW
+  pooled hidden plus the exit-norm parameters and applies the norm inside
+  the kernel (at the first vocab tile, into VMEM scratch), so the whole
+  norm -> matmul -> online-softmax epilogue is ONE program launch where
+  the serving paths previously ran two (the XLA norm ops and then this
+  kernel). Pooling commutes with the norm (pooling selects a token, the
+  norm is per-token), which is what makes the (B, D) fused form exact.
 """
 from __future__ import annotations
 
@@ -24,24 +35,20 @@ DEFAULT_BLOCK_B = 128
 DEFAULT_BLOCK_V = 512
 
 NEG_INF = -1e30
+NORM_EPS = 1e-6   # matches models.common rmsnorm/layernorm
 
 
-def _kernel(h_ref, w_ref, conf_ref, pred_ref, m_scr, s_scr, a_scr, *,
-            vocab_size: int, block_v: int, num_v_tiles: int):
-    vi = pl.program_id(1)
+def _online_update(logits, vi, m_scr, s_scr, a_scr, *,
+                   vocab_size: int, block_v: int):
+    """Fold one (bb, bv) logits tile into the running (max, sumexp, argmax).
 
-    @pl.when(vi == 0)
-    def _init():
-        m_scr[:] = jnp.full_like(m_scr, NEG_INF)
-        s_scr[:] = jnp.zeros_like(s_scr)
-        a_scr[:] = jnp.zeros_like(a_scr)
-
-    h = h_ref[:].astype(jnp.float32)              # (bb, D)
-    w = w_ref[:].astype(jnp.float32)              # (D, bv)
-    logits = jax.lax.dot_general(
-        h, w, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)       # (bb, bv)
-
+    Argmax tie-break is pinned to LOWEST-INDEX-WINS: a later tile may take
+    the running argmax only on a STRICT improvement (``tile_max > m_prev``),
+    and within a tile ``jnp.argmax`` returns the first maximal column —
+    together matching the ref oracle's global first-occurrence ``argmax``
+    even when the max ties across tile boundaries (regression test:
+    tests/test_kernels_exit_confidence.py, ties straddling ``block_v``).
+    """
     # mask vocab padding in the last tile
     col = vi * block_v + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
     logits = jnp.where(col < vocab_size, logits, NEG_INF)
@@ -61,6 +68,26 @@ def _kernel(h_ref, w_ref, conf_ref, pred_ref, m_scr, s_scr, a_scr, *,
     m_scr[:] = m_new
     s_scr[:] = s_new
     a_scr[:] = a_new
+
+
+def _kernel(h_ref, w_ref, conf_ref, pred_ref, m_scr, s_scr, a_scr, *,
+            vocab_size: int, block_v: int, num_v_tiles: int):
+    vi = pl.program_id(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        m_scr[:] = jnp.full_like(m_scr, NEG_INF)
+        s_scr[:] = jnp.zeros_like(s_scr)
+        a_scr[:] = jnp.zeros_like(a_scr)
+
+    h = h_ref[:].astype(jnp.float32)              # (bb, D)
+    w = w_ref[:].astype(jnp.float32)              # (D, bv)
+    logits = jax.lax.dot_general(
+        h, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)       # (bb, bv)
+
+    _online_update(logits, vi, m_scr, s_scr, a_scr,
+                   vocab_size=vocab_size, block_v=block_v)
 
     @pl.when(vi == num_v_tiles - 1)
     def _finish():
@@ -108,3 +135,110 @@ def exit_confidence_pallas(h, w, *, block_b: int = DEFAULT_BLOCK_B,
         out_shape=out_shapes,
         interpret=interpret,
     )(h, w)
+
+
+# ------------------------------------------------------- fused exit epilogue
+
+def _fused_kernel(x_ref, g_ref, nb_ref, w_ref, hb_ref, conf_ref, pred_ref,
+                  hbar_scr, m_scr, s_scr, a_scr, *, vocab_size: int,
+                  block_v: int, num_v_tiles: int, kind: str):
+    vi = pl.program_id(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        # norm the batch tile ONCE, into VMEM scratch reused by every
+        # vocab tile (per-row reductions only — the fused form is exact
+        # because pooling commutes with the per-token norm)
+        x = x_ref[:].astype(jnp.float32)                      # (bb, D)
+        g = g_ref[:].astype(jnp.float32)                      # (1|bb, D)
+        if kind == "rmsnorm":
+            var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+            y = (x * jax.lax.rsqrt(var + NORM_EPS)) * g
+        else:
+            mu = jnp.mean(x, axis=-1, keepdims=True)
+            var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+            y = ((x - mu) * jax.lax.rsqrt(var + NORM_EPS)) * g
+        y = y + nb_ref[:].astype(jnp.float32)
+        # mirror the unfused epilogue's cast back to the activation dtype
+        # (apply_norm returns x.dtype before the confidence matmul)
+        hbar_scr[:] = y.astype(x_ref.dtype).astype(jnp.float32)
+        m_scr[:] = jnp.full_like(m_scr, NEG_INF)
+        s_scr[:] = jnp.zeros_like(s_scr)
+        a_scr[:] = jnp.zeros_like(a_scr)
+
+    w = w_ref[:].astype(jnp.float32)                          # (D, bv)
+    logits = jax.lax.dot_general(
+        hbar_scr[:], w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                   # (bb, bv)
+    logits = logits + hb_ref[:].astype(jnp.float32)[None, :]
+
+    _online_update(logits, vi, m_scr, s_scr, a_scr,
+                   vocab_size=vocab_size, block_v=block_v)
+
+    @pl.when(vi == num_v_tiles - 1)
+    def _finish():
+        conf_ref[:] = (1.0 / s_scr[:]).astype(conf_ref.dtype)
+        pred_ref[:] = a_scr[:]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kind", "block_b", "block_v", "interpret"))
+def exit_confidence_fused_pallas(x, gamma, nbias, w, hbias, *,
+                                 kind: str = "rmsnorm",
+                                 block_b: int = DEFAULT_BLOCK_B,
+                                 block_v: int = DEFAULT_BLOCK_V,
+                                 interpret: bool = False):
+    """Fused exit epilogue: norm(x) @ w (+hbias) -> online-softmax conf/pred.
+
+    x: (B, D) RAW pooled hidden; gamma: norm scale, (D,) shared or (B, D)
+    per row (the scan path stacks per-layer exit norms row-wise); nbias:
+    layernorm shift, same shapes (pass zeros for rmsnorm); w: (D, V);
+    hbias: (V,) exit-head bias (pass zeros when absent). One launch where
+    the unfused path runs the XLA norm ops and then the confidence kernel.
+    """
+    b, d = x.shape
+    d2, v = w.shape
+    assert d == d2, (x.shape, w.shape)
+    gamma = gamma if gamma.ndim == 2 else gamma[None, :]
+    nbias = nbias if nbias.ndim == 2 else nbias[None, :]
+    assert gamma.shape == nbias.shape, (gamma.shape, nbias.shape)
+    per_row = gamma.shape[0] != 1
+    if per_row:
+        assert gamma.shape[0] == b, (gamma.shape, x.shape)
+    block_b = min(block_b, max(b, 8))
+    block_v = min(block_v, v) if v < block_v else block_v
+    nb = pl.cdiv(b, block_b)
+    nv = pl.cdiv(v, block_v)
+
+    if per_row:
+        norm_spec = pl.BlockSpec((block_b, d), lambda bi, vi: (bi, 0))
+    else:
+        norm_spec = pl.BlockSpec((1, d), lambda bi, vi: (0, 0))
+    kern = functools.partial(_fused_kernel, vocab_size=v, block_v=block_v,
+                             num_v_tiles=nv, kind=kind)
+    return pl.pallas_call(
+        kern,
+        grid=(nb, nv),
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda bi, vi: (bi, 0)),
+            norm_spec,
+            norm_spec,
+            pl.BlockSpec((d, block_v), lambda bi, vi: (0, vi)),
+            pl.BlockSpec((block_v,), lambda bi, vi: (vi,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_b,), lambda bi, vi: (bi,)),
+            pl.BlockSpec((block_b,), lambda bi, vi: (bi,)),
+        ),
+        scratch_shapes=(
+            pltpu.VMEM((block_b, d), jnp.float32),
+            pltpu.VMEM((block_b,), jnp.float32),
+            pltpu.VMEM((block_b,), jnp.float32),
+            pltpu.VMEM((block_b,), jnp.int32),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ),
+        interpret=interpret,
+    )(x, gamma, nbias, w, hbias)

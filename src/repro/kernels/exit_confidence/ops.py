@@ -1,35 +1,95 @@
-"""Jit'd public wrapper for the fused exit-confidence op.
+"""Backend dispatch for the exit-confidence ops.
 
-Routing: ``backend="pallas_interpret"`` (CPU validation), ``"pallas"``
-(TPU), or ``"ref"`` (pure jnp; also the default on CPU serving paths where
-interpret-mode would be slow). Bias support is folded in by augmenting the
-hidden vector with a constant 1 column (keeps the kernel bias-free).
+``backend="ref"`` is the pure-jnp oracle, ``"pallas"`` the TPU kernel,
+``"pallas_interpret"`` the same kernel under the Pallas interpreter (CPU
+validation). Dispatch happens OUTSIDE any jit cache keyed on block sizes:
+the ref path ignores ``block_b``/``block_v`` entirely, so it must not
+recompile when a backend sweep varies them (it used to — the wrapper was
+jitted with the block sizes as static args), and unknown backend strings
+raise an actionable error instead of falling through to Pallas.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.exit_confidence.kernel import exit_confidence_pallas
-from repro.kernels.exit_confidence.ref import exit_confidence_ref
+from repro.kernels.exit_confidence.kernel import (
+    DEFAULT_BLOCK_B, DEFAULT_BLOCK_V, exit_confidence_fused_pallas,
+    exit_confidence_pallas)
+from repro.kernels.exit_confidence.ref import (
+    exit_confidence_fused_ref, exit_confidence_ref)
+
+BACKENDS = ("ref", "pallas", "pallas_interpret")
+NORM_KINDS = ("rmsnorm", "layernorm")
+
+# jitted once per data shape — block sizes never enter these cache keys
+_ref_jit = jax.jit(exit_confidence_ref)
+_fused_ref_jit = jax.jit(exit_confidence_fused_ref, static_argnames=("kind",))
 
 
-@functools.partial(jax.jit, static_argnames=("backend", "block_b", "block_v"))
+def _check_backend(backend: str) -> None:
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"exit_confidence backend={backend!r} is unknown; choose one of "
+            f"{BACKENDS}: 'ref' (pure-jnp oracle), 'pallas' (TPU kernel), "
+            f"'pallas_interpret' (kernel under the interpreter, for CPU "
+            f"validation)")
+
+
+def _fold_bias(h, w, bias):
+    """Fold an exit-head bias into the matmul by augmenting h with a ones
+    column and w with the bias row, so the Pallas kernel needs no bias
+    input on the pre-normed path."""
+    ones = jnp.ones(h.shape[:-1] + (1,), h.dtype)
+    h = jnp.concatenate([h, ones], axis=-1)
+    w = jnp.concatenate([w, jnp.asarray(bias)[None, :].astype(w.dtype)],
+                        axis=0)
+    return h, w
+
+
 def exit_confidence(h, w, bias=None, *, backend: str = "ref",
-                    block_b: int = 128, block_v: int = 512):
-    """Fused ``max_c softmax(h @ w + bias)`` -> (confidence, prediction).
+                    block_b: int = DEFAULT_BLOCK_B,
+                    block_v: int = DEFAULT_BLOCK_V):
+    """Confidence + argmax of the exit head: h (B, D) @ w (D, V) [+ bias].
 
-    h: (B, D); w: (D, V); bias: (V,) or None.
-    Returns (conf (B,) float32, pred (B,) int32).
+    Returns ``(conf (B,) f32, pred (B,) i32)`` where conf is the max
+    softmax probability (the paper's C_i).
     """
+    _check_backend(backend)
     if backend == "ref":
-        return exit_confidence_ref(h, w, bias)
+        return _ref_jit(h, w, bias)
     if bias is not None:
-        ones = jnp.ones(h.shape[:-1] + (1,), h.dtype)
-        h = jnp.concatenate([h, ones], axis=-1)
-        w = jnp.concatenate([w, bias[None, :].astype(w.dtype)], axis=0)
-    interpret = backend == "pallas_interpret"
+        h, w = _fold_bias(h, w, bias)
     return exit_confidence_pallas(h, w, block_b=block_b, block_v=block_v,
-                                  interpret=interpret)
+                                  interpret=(backend == "pallas_interpret"))
+
+
+def exit_confidence_fused(x, norm_params, w, bias=None, *,
+                          kind: str = "rmsnorm", backend: str = "ref",
+                          block_b: int = DEFAULT_BLOCK_B,
+                          block_v: int = DEFAULT_BLOCK_V):
+    """Fused exit epilogue: exit-norm + head matmul + online softmax as
+    ONE program (the unfused path launches the norm and the confidence
+    kernel separately).
+
+    ``x (B, D)`` is the RAW pooled hidden (pooling selects a token and the
+    norm is per-token, so pool and norm commute — the (B, D) fused form is
+    exact); ``norm_params`` is the exit-norm dict ``{"scale"[, "bias"]}``
+    with entries ``(D,)`` shared or ``(B, D)`` per row (scan path stacks
+    per-layer norms row-wise); ``bias`` an optional (V,) head bias.
+    """
+    _check_backend(backend)
+    if kind not in NORM_KINDS:
+        raise ValueError(
+            f"exit_confidence_fused kind={kind!r} is unknown; choose one of "
+            f"{NORM_KINDS}")
+    if backend == "ref":
+        return _fused_ref_jit(x, norm_params, w, bias, kind=kind)
+    gamma = norm_params["scale"]
+    nbias = norm_params.get("bias")
+    if nbias is None:
+        nbias = jnp.zeros_like(gamma)
+    hbias = jnp.zeros((w.shape[-1],), jnp.float32) if bias is None else bias
+    return exit_confidence_fused_pallas(
+        x, gamma, nbias, w, hbias, kind=kind, block_b=block_b,
+        block_v=block_v, interpret=(backend == "pallas_interpret"))

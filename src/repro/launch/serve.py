@@ -146,6 +146,15 @@ def add_serving_config_args(ap: argparse.ArgumentParser):
                          "object (config: cost_trace), e.g. "
                          "'{\"kind\": \"steps\", \"times\": [500], "
                          "\"values\": [1.0, 8.0]}'")
+    ap.add_argument("--offload-quant", choices=["none", "int8", "int4"],
+                    default=None,
+                    help="quantize the offloaded bottleneck activation "
+                         "(config: offload_quant); per-channel affine, "
+                         "see docs/SERVING.md, 'Quantized offload'")
+    ap.add_argument("--offload-sparsity", type=float, default=None,
+                    help="fraction of bottleneck entries dropped by "
+                         "top-|x| sparsification before quantization "
+                         "(config: offload_sparsity; 0 = dense)")
     ap.add_argument("--scheduler", choices=["none", "fifo"], default=None,
                     help="continuous-batching request scheduler (config: "
                          "scheduler; see docs/SERVING.md, 'Request "
@@ -202,6 +211,10 @@ def serving_config_from_args(args) -> ServingConfig:
     if args.cost_trace is not None:
         import json
         overrides["cost_trace"] = json.loads(args.cost_trace)
+    if args.offload_quant is not None:
+        overrides["offload_quant"] = args.offload_quant
+    if args.offload_sparsity is not None:
+        overrides["offload_sparsity"] = args.offload_sparsity
     if args.scheduler is not None:
         overrides["scheduler"] = args.scheduler
     if args.deadline_ms is not None:
@@ -221,6 +234,14 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--offload", type=float, default=5.0)
     ap.add_argument("--eval-domain", default="imdb_like")
+    ap.add_argument("--conf-backend", default="ref",
+                    choices=["ref", "pallas", "pallas_interpret"],
+                    help="exit-confidence kernel backend (runtime, not "
+                         "config: 'pallas' needs a TPU)")
+    ap.add_argument("--fused-exit", action="store_true",
+                    help="fuse exit-norm + head + confidence into one "
+                         "program (runtime; see docs/ARCHITECTURE.md, "
+                         "kernel layer)")
     ap.add_argument("--num-processes", type=int, default=2,
                     help="worker count for --distributed self-spawn")
     args = ap.parse_args()
@@ -281,7 +302,8 @@ def main():
     if host0:
         print(f"calibrated alpha={alpha:.2f}")
 
-    runtime = EdgeCloudRuntime(cfg)
+    runtime = EdgeCloudRuntime(cfg, conf_backend=args.conf_backend,
+                               fused_exit=args.fused_exit)
     stream = OnlineStream(eval_data, seed=0)
     path = scfg.resolved_path()
     if path in ("sharded", "distributed"):

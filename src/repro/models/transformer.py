@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.kernels.exit_confidence.ops import exit_confidence
+from repro.kernels.exit_confidence.ops import (exit_confidence,
+                                               exit_confidence_fused)
 from repro.models import attention as attn
 from repro.models import mamba2 as m2
 from repro.models import mlp as ff
@@ -330,7 +331,8 @@ def forward_exits(params, cfg: ModelConfig, batch: Dict[str, Any], *,
 
 def forward_exits_masked(params, cfg: ModelConfig, batch: Dict[str, Any],
                          depths, *, backend: str = "ref",
-                         conf_backend: str = "ref", window=None):
+                         conf_backend: str = "ref", window=None,
+                         fused_exit: bool = False):
     """Depth-masked scan over layers: one program for every depth mix.
 
     ``depths`` is a (B,) int32 vector of 0-indexed split layers, one per
@@ -368,15 +370,35 @@ def forward_exits_masked(params, cfg: ModelConfig, batch: Dict[str, Any],
         xx2, _ = _layer_full(cfg, params, lp, xx, positions, i,
                              window=window, backend=backend)
         xx = jnp.where(i <= live, xx2, xx)
-        pooled = pool_hidden(cfg, apply_norm(xx, lp["exit_norm"], cfg.norm))
-        return xx, pooled
+        # the fused epilogue norms inside the confidence program, so the
+        # scan only pools the raw carry (pooling commutes with the norm)
+        src = xx if fused_exit else apply_norm(xx, lp["exit_norm"], cfg.norm)
+        return xx, pool_hidden(cfg, src)
 
     idx = jnp.arange(cfg.num_layers)
     x, pooled = jax.lax.scan(body, x, (params["layers"], idx),
                              unroll=_unroll())
     # pooled: (L, B, D) — per-layer exit pools, frozen past each depth
     l, bb, d = pooled.shape
-    if cfg.exits.share_head or not cfg.exits.enabled:
+    share = cfg.exits.share_head or not cfg.exits.enabled
+    if fused_exit:
+        norm_p = params["layers"]["exit_norm"]   # stacked (L, D) entries
+        if share:
+            # rows are (l*bb, d) with row l*bb+b normed by layer l's exit
+            # norm -> repeat each layer's params bb times row-wise
+            rows_p = jax.tree.map(lambda a: jnp.repeat(a, bb, axis=0),
+                                  norm_p)
+            conf, pred = exit_confidence_fused(pooled.reshape(l * bb, d),
+                                               rows_p, params["exit_w"],
+                                               kind=cfg.norm,
+                                               backend=conf_backend)
+        else:
+            conf, pred = jax.vmap(
+                lambda p_i, np_i, w_i: exit_confidence_fused(
+                    p_i, np_i, w_i, kind=cfg.norm, backend=conf_backend))(
+                pooled, norm_p, params["layers"]["exit_w"])
+            conf, pred = conf.reshape(l * bb), pred.reshape(l * bb)
+    elif share:
         conf, pred = exit_confidence(pooled.reshape(l * bb, d),
                                      params["exit_w"],
                                      backend=conf_backend)

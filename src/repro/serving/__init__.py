@@ -15,6 +15,10 @@ from repro.serving.batched import (
     PendingFlush,
     serve_stream_batched,
 )
+from repro.serving.offload_codec import (
+    EncodedRows,
+    OffloadCodec,
+)
 from repro.serving.sharded import (
     serve_stream_sharded,
 )
@@ -61,6 +65,8 @@ __all__ = [
     "serve",
     # runtime building blocks
     "EdgeCloudRuntime",
+    "EncodedRows",
+    "OffloadCodec",
     "OffloadQueue",
     "PendingFlush",
     # request scheduling (Engine sessions)

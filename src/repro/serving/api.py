@@ -44,6 +44,8 @@ from repro.core.controller import CONTROLLER_MODES
 from repro.core.rewards import CostModel, CostTrace
 from repro.serving.batched import _BatchedSession, _serve_stream_batched
 from repro.serving.distributed import _serve_stream_distributed
+from repro.serving.offload_codec import (QUANT_MODES, OffloadCodec,
+                                         codec_from_fields)
 from repro.serving.scheduler import (SCHEDULERS, SHED_POLICIES,
                                      RequestScheduler)
 from repro.serving.sharded import _ShardedSession, _serve_stream_sharded
@@ -99,6 +101,9 @@ class ServingConfig:
     max_queue: int = 0                # admission cap; 0 = unbounded queue
     batch_deadline_ms: float = 0.0    # close partial batches after this wait
     shed_policy: str = "reject"       # queue-full policy: reject | drop_oldest
+    # ---- quantized offload (all paths) ---------------------------------
+    offload_quant: str = "none"       # | "int8" | "int4" per-channel affine
+    offload_sparsity: float = 0.0     # fraction of entries dropped (top-|x|)
     # ---- non-stationary controller (all paths) -------------------------
     controller_mode: str = "stationary"  # | "sliding_window" | "discounted"
     window: int = 0                   # sliding-window size in batches; 0 = inf
@@ -211,6 +216,17 @@ class ServingConfig:
                 "edge_mode", self.edge_mode,
                 "the distributed runtime keeps the bucketed edge phase; "
                 "use the batched/sharded paths for scan mode"))
+        if self.offload_quant not in QUANT_MODES:
+            raise ValueError(_err(
+                "offload_quant", self.offload_quant,
+                f"choose one of {QUANT_MODES} (per-channel affine "
+                f"quantization of the offloaded activation; 'none' ships "
+                f"the full-dtype tensor)"))
+        if not 0.0 <= self.offload_sparsity < 1.0:
+            raise ValueError(_err(
+                "offload_sparsity", self.offload_sparsity,
+                "the fraction of activation entries dropped before "
+                "offload must be in [0, 1); 0.0 ships every entry"))
         if self.controller_mode not in CONTROLLER_MODES:
             raise ValueError(_err(
                 "controller_mode", self.controller_mode,
@@ -436,6 +452,13 @@ class ServeReport:
 
 # ----------------------------------------------------------------- facade
 
+def _codec_from_config(config: ServingConfig) -> Optional[OffloadCodec]:
+    """The offload codec a config implies, or None for the identity
+    config (quant='none', sparsity=0.0) — so codec-free runs keep
+    today's exact byte-for-byte path."""
+    return codec_from_fields(config.offload_quant, config.offload_sparsity)
+
+
 def _controller_kwargs(config: ServingConfig) -> Optional[Dict[str, Any]]:
     """Controller-construction kwargs a config implies, or None when the
     config asks for the default stationary controller (so legacy paths
@@ -506,7 +529,8 @@ def serve(runtime: EdgeCloudRuntime, params, stream, cost: CostModel,
     common = dict(side_info=config.side_info, beta=config.beta,
                   max_samples=config.max_samples,
                   labels_for_accounting=config.labels_for_accounting,
-                  controller_kwargs=_controller_kwargs(config))
+                  controller_kwargs=_controller_kwargs(config),
+                  codec=_codec_from_config(config))
     t0 = time.perf_counter()
     if path == "sequential":
         raw = _serve_stream_sequential(runtime, params, stream, cost,
@@ -600,6 +624,7 @@ class Engine:
         c = self.config
         self._path = path             # what serve() would report
         ctl_kw = _controller_kwargs(c)
+        codec = _codec_from_config(c)
         if path == "sharded":
             self._sess = _ShardedSession(
                 runtime, params, cost, batch_size=c.batch_size,
@@ -607,7 +632,7 @@ class Engine:
                 overlap_depth=c.overlap_depth, side_info=c.side_info,
                 beta=c.beta, labels_for_accounting=c.labels_for_accounting,
                 record_trace=c.record_trace, edge_mode=c.edge_mode,
-                controller_kwargs=ctl_kw)
+                controller_kwargs=ctl_kw, codec=codec)
         else:
             if mesh is not None:
                 raise ValueError(
@@ -620,7 +645,7 @@ class Engine:
                 side_info=c.side_info, beta=c.beta,
                 labels_for_accounting=c.labels_for_accounting,
                 record_trace=c.record_trace, edge_mode=c.edge_mode,
-                controller_kwargs=ctl_kw)
+                controller_kwargs=ctl_kw, codec=codec)
         self._clock = clock if clock is not None else time.monotonic
         self._sched: Optional[RequestScheduler] = None
         if c.scheduler != "none":

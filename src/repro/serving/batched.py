@@ -41,6 +41,7 @@ import numpy as np
 from repro.core.controller import SplitEEController
 from repro.core.rewards import CostModel
 from repro.data.stream import microbatches
+from repro.serving.offload_codec import OffloadCodec
 from repro.serving.simulator import EdgeCloudRuntime
 
 
@@ -60,6 +61,18 @@ def _bucket_cap(k: int, multiple: int = 1) -> int:
     """
     cap = max(_pow2(k), multiple)
     return -(-cap // multiple) * multiple
+
+
+def _offload_scale(codec: Optional[OffloadCodec],
+                   runtime: EdgeCloudRuntime, seq_len: int) -> float:
+    """Scale on the bandit's communication term: wire bytes over
+    full-dtype activation bytes (1.0 without a codec). Deterministic per
+    (codec, shape) so every replica/host prices offloads identically."""
+    if codec is None:
+        return 1.0
+    cfg = runtime.cfg
+    return codec.cost_ratio(seq_len, cfg.d_model,
+                            jnp.dtype(cfg.dtype).itemsize)
 
 
 def _pad_rows(arr: np.ndarray, cap: int) -> np.ndarray:
@@ -84,13 +97,17 @@ class PendingFlush:
     launches (the pipeline ring in ``flush_async``).
     """
 
-    def __init__(self, launches):
+    def __init__(self, launches, slot_bytes: Optional[Dict[int, int]] = None):
         # [(slots, conf_dev, pred_dev)] in depth order — the dispatch
         # order is fixed at flush time, so resolution order (and thus
         # slot bookkeeping) is deterministic regardless of when
         # ``resolve`` is called.
         self._launches = launches
         self._result: Optional[Dict[int, tuple]] = None
+        # wire bytes actually shipped per offloaded slot, recorded at
+        # dispatch time (the flush measured its own payload) — the byte
+        # accounting reads this instead of re-deriving from config dtype
+        self.slot_bytes: Dict[int, int] = slot_bytes or {}
 
     def __len__(self):
         if self._result is not None:
@@ -135,13 +152,18 @@ class OffloadQueue:
     ``flush_async().resolve()``.
     """
 
-    def __init__(self, runtime: EdgeCloudRuntime, params, *, put=None):
+    def __init__(self, runtime: EdgeCloudRuntime, params, *, put=None,
+                 codec: Optional[OffloadCodec] = None):
         self.runtime = runtime
         self.params = params
         # host->device placement hook: the sharded runtime passes a
         # device_put that spreads the padded rows over the mesh's data
         # axis; default is plain single-device placement.
         self.put = put if put is not None else jnp.asarray
+        # optional quantized-offload codec: the flush encodes the queued
+        # rows to the wire format and hands the cloud the lossy decode —
+        # the single edge->cloud handoff shared by all runtimes
+        self.codec = codec
         self.rows: Dict[int, List[np.ndarray]] = {}   # depth -> [(S, D)]
         self.slots: Dict[int, List[int]] = {}
         self.inflight: List[PendingFlush] = []        # flush_async ring
@@ -173,16 +195,25 @@ class OffloadQueue:
         if depth is not None and depth < 1:
             raise ValueError(f"pipeline depth must be >= 1, got {depth}")
         launches = []
+        slot_bytes: Dict[int, int] = {}
         for d in sorted(self.rows):
             slots = self.slots[d]
             hidden = _pad_rows(np.stack(self.rows[d]),
                                _bucket_cap(len(slots), min_rows))
+            if self.codec is not None:
+                enc = self.codec.encode(hidden)
+                hidden = self.codec.decode(enc)
+                rb = enc.row_bytes
+            else:
+                rb = int(hidden[0].nbytes)
             conf_L, pred_L = self.runtime.cloud_fn(
                 self.params, self.put(hidden), jnp.int32(d))
             launches.append((list(slots), conf_L, pred_L))
+            for s in slots:
+                slot_bytes[s] = rb
         self.rows.clear()
         self.slots.clear()
-        pending = PendingFlush(launches)
+        pending = PendingFlush(launches, slot_bytes)
         if depth is not None:
             self.inflight = [p for p in self.inflight if not p.resolved]
             self.inflight.append(pending)
@@ -252,7 +283,8 @@ class _BatchedSession:
                  *, batch_size: int = 32, side_info: bool = False,
                  beta: float = 1.0, labels_for_accounting: bool = True,
                  record_trace: bool = False, edge_mode: str = "bucketed",
-                 controller_kwargs: Optional[Dict[str, Any]] = None):
+                 controller_kwargs: Optional[Dict[str, Any]] = None,
+                 codec: Optional[OffloadCodec] = None):
         # lazy import: scan_edge imports OffloadQueue/_pad_rows from here
         from repro.serving.scan_edge import select_edge_phase
         self.runtime = runtime
@@ -265,7 +297,8 @@ class _BatchedSession:
         self.labels_for_accounting = labels_for_accounting
         self.ctl = SplitEEController(cost, beta=beta, side_info=side_info,
                                      **(controller_kwargs or {}))
-        self.queue = OffloadQueue(runtime, params)
+        self.codec = codec
+        self.queue = OffloadQueue(runtime, params, codec=codec)
         self.correct: List[int] = []
         self.preds: List[int] = []
         self.trace: Optional[Dict[str, list]] = (
@@ -291,17 +324,21 @@ class _BatchedSession:
             side_info=self.side_info)
 
         # ---- cloud: flush the offload queue in depth buckets -----------
-        cloud = self.queue.flush()
+        pending = self.queue.flush_async()
+        cloud = pending.resolve()
         conf_Ls: List[Optional[float]] = [None] * B
-        ob = self.runtime.offload_bytes(1, seq_len)
         obs = [0] * B
         for s, (c_L, p_L) in cloud.items():
             conf_Ls[s] = c_L
             batch_preds[s] = p_L
-            obs[s] = ob
+            # bytes the flush actually shipped for this slot (codec wire
+            # format when one is set, raw activation bytes otherwise)
+            obs[s] = pending.slot_bytes[s]
 
         # ---- delayed-feedback batch update -----------------------------
-        self.ctl.update_batch(arms, conf_paths, conf_Ls, obs)
+        self.ctl.update_batch(
+            arms, conf_paths, conf_Ls, obs,
+            offload_scale=_offload_scale(self.codec, self.runtime, seq_len))
 
         self.preds.extend(batch_preds)
         if self.trace is not None:
@@ -353,13 +390,14 @@ def _serve_stream_batched(runtime: EdgeCloudRuntime, params, stream,
                           record_trace: bool = False,
                           edge_mode: str = "bucketed",
                           controller_kwargs: Optional[Dict[str, Any]] = None,
+                          codec: Optional[OffloadCodec] = None,
                           ) -> Dict[str, Any]:
     """Offline driver: replay a finite stream through a batched session."""
     sess = _BatchedSession(runtime, params, cost, batch_size=batch_size,
                            side_info=side_info, beta=beta,
                            labels_for_accounting=labels_for_accounting,
                            record_trace=record_trace, edge_mode=edge_mode,
-                           controller_kwargs=controller_kwargs)
+                           controller_kwargs=controller_kwargs, codec=codec)
     for batch in microbatches(stream, batch_size, max_samples):
         sess.push(batch)
     return sess.result()

@@ -93,7 +93,7 @@ from repro.core.controller import (ShardUpdate, SplitEEController,
 from repro.core.rewards import CostModel
 from repro.launch.mesh import make_serving_mesh
 from repro.launch.shardings import param_shardings
-from repro.serving.batched import OffloadQueue, _edge_phase
+from repro.serving.batched import OffloadQueue, _edge_phase, _offload_scale
 from repro.serving.faults import FaultInjector
 from repro.serving.kvstore import CoordinatorKV, FileKV, KVKeyExists, KVTimeout
 from repro.serving.sharded import (_BatchCtx, _data_put, _drive_pipeline,
@@ -801,6 +801,7 @@ def _serve_stream_distributed(runtime: EdgeCloudRuntime, params, stream,
                               stream_offset: int = 0,
                               record_states: bool = False,
                               controller_kwargs: Optional[Dict[str, Any]] = None,
+                              codec=None,
                               ) -> Dict[str, Any]:
     """Serve a sample stream across all processes of a jax.distributed run.
 
@@ -864,7 +865,7 @@ def _serve_stream_distributed(runtime: EdgeCloudRuntime, params, stream,
                             **(controller_kwargs or {}))
     if init_state is not None:
         ctl.restore(init_state)
-    queue = OffloadQueue(runtime, params, put=put)
+    queue = OffloadQueue(runtime, params, put=put, codec=codec)
     correct, preds = [], []
     states: List[Dict[str, Any]] = []
     n = 0
@@ -914,12 +915,15 @@ def _serve_stream_distributed(runtime: EdgeCloudRuntime, params, stream,
         nonlocal n, overlapped, lost
         B = len(ctx.labels)
         # my slice's cloud results (slots are slice-local indices)
-        conf_Ls, obs = _resolve_cloud(runtime, ctx)
+        conf_Ls, obs = _resolve_cloud(ctx)
         # global stream position of the batch, agreed by every host (the
         # controller's own counter lags it whenever slices were lost)
-        shard = ctl.prepare_shard_update(ctx.arms, ctx.conf_paths,
-                                         conf_Ls, obs,
-                                         round=stream_offset + ctx.start)
+        # (offload_scale is deterministic per codec+shape, so every host
+        # prices its slice identically and the gathered folds agree)
+        shard = ctl.prepare_shard_update(
+            ctx.arms, ctx.conf_paths, conf_Ls, obs,
+            round=stream_offset + ctx.start,
+            offload_scale=_offload_scale(codec, runtime, ctx.seq_len))
         payload = _pack_host_update(
             shard, np.asarray(ctx.batch_preds, np.int64))
         if ft:

@@ -1,0 +1,220 @@
+"""Quantized-bottleneck codec for the edge->cloud offload payload.
+
+The paper's eq. (1) reward weighs accuracy against computation *and
+communication* cost, but shipping the split-point activation at full
+dtype prices every offload at ``S * D * itemsize`` bytes. The split
+tensor compresses aggressively with negligible accuracy loss (Predefined
+Sparsity, arxiv 2407.11763), so this module implements the wire format
+the offload queue applies at flush time:
+
+* **per-channel affine quantization** (``int8`` or ``int4``): for each
+  offloaded row ``(S, D)``, per-channel ``scale``/``zero`` (f32 each) are
+  fit over the sequence axis, values are rounded to the integer grid
+  (int4 packs two values per byte), and the cloud side dequantizes before
+  running the remaining layers.
+* **top-k sparsification** (``sparsity`` = fraction of entries DROPPED):
+  keeps the largest-|x| entries per row (deterministic, stable tie order)
+  and ships their int32 flat indices alongside the kept values; dropped
+  entries decode to exactly 0.0. Composes with quantization
+  (sparsify-then-quantize).
+
+Everything is host-side numpy on the queue's already host-resident rows.
+``row_bytes``/``cost_ratio`` are exact closed forms for the wire size
+(tests pin them against the measured encoding), deterministic per shape —
+so the bandit's communication term and every host in a distributed run
+price offloads identically.
+
+The identity config (``quant="none"``, ``sparsity=0.0``) is represented
+as *no codec at all* (`codec_from_fields` returns None) and the serving
+paths keep today's exact byte-for-byte behavior.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+QUANT_MODES = ("none", "int8", "int4")
+
+_QRANGE = {"int8": (-128, 127), "int4": (-8, 7)}
+_SCALE_ZERO_BYTES = 8   # per channel: f32 scale + f32 zero-point
+_INDEX_BYTES = 4        # int32 flat index per kept entry (sparse only)
+
+
+def _pack_int4(q: np.ndarray) -> np.ndarray:
+    """(k, m) int8 in [-8, 7] -> (k, ceil(m/2)) uint8, two nibbles/byte."""
+    k, m = q.shape
+    u = (q.astype(np.int16) + 8).astype(np.uint8)       # [0, 15]
+    if m % 2:
+        u = np.concatenate([u, np.zeros((k, 1), np.uint8)], axis=1)
+    return (u[:, 0::2] | (u[:, 1::2] << 4)).astype(np.uint8)
+
+
+def _unpack_int4(data: np.ndarray, m: int) -> np.ndarray:
+    k = data.shape[0]
+    u = np.empty((k, data.shape[1] * 2), np.uint8)
+    u[:, 0::2] = data & 0x0F
+    u[:, 1::2] = data >> 4
+    return u[:, :m].astype(np.int16) - 8
+
+
+@dataclasses.dataclass
+class EncodedRows:
+    """Wire-format payload for a stack of offloaded rows.
+
+    ``data`` holds the kept values (original dtype for quant="none", int8,
+    or int4-packed uint8); ``scale``/``zero`` the per-row per-channel
+    affine params; ``index`` the per-row int32 flat indices of kept
+    entries (None when dense).
+    """
+    codec: "OffloadCodec"
+    shape: Tuple[int, int, int]          # (rows, seq_len, d_model)
+    dtype: np.dtype                      # dtype to decode back to
+    data: np.ndarray
+    scale: Optional[np.ndarray] = None   # (rows, D) f32
+    zero: Optional[np.ndarray] = None    # (rows, D) f32
+    index: Optional[np.ndarray] = None   # (rows, kept) i32
+
+    @property
+    def row_bytes(self) -> int:
+        """Measured wire bytes per row (values + affine params + indices)."""
+        k = self.shape[0]
+        per = self.data.nbytes // k
+        if self.scale is not None:
+            per += (self.scale.nbytes + self.zero.nbytes) // k
+        if self.index is not None:
+            per += self.index.nbytes // k
+        return per
+
+    @property
+    def nbytes(self) -> int:
+        return self.row_bytes * self.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadCodec:
+    """quant in {"none", "int8", "int4"}; sparsity = fraction dropped."""
+    quant: str = "none"
+    sparsity: float = 0.0
+
+    def __post_init__(self):
+        if self.quant not in QUANT_MODES:
+            raise ValueError(
+                f"OffloadCodec quant={self.quant!r} is unknown; choose one "
+                f"of {QUANT_MODES}")
+        if not 0.0 <= self.sparsity < 1.0:
+            raise ValueError(
+                f"OffloadCodec sparsity={self.sparsity!r} out of range; "
+                f"need 0.0 <= sparsity < 1.0 (fraction of entries dropped)")
+
+    @property
+    def identity(self) -> bool:
+        return self.quant == "none" and self.sparsity == 0.0
+
+    def kept(self, seq_len: int, d_model: int) -> int:
+        total = seq_len * d_model
+        if self.sparsity == 0.0:
+            return total
+        return max(1, total - int(round(self.sparsity * total)))
+
+    def row_bytes(self, seq_len: int, d_model: int, itemsize: int) -> int:
+        """Exact wire bytes for one (S, D) row — pinned against the
+        measured ``EncodedRows.row_bytes`` by the codec tests."""
+        total = seq_len * d_model
+        k = self.kept(seq_len, d_model)
+        if self.quant == "none":
+            out = k * itemsize
+        elif self.quant == "int8":
+            out = k + _SCALE_ZERO_BYTES * d_model
+        else:  # int4
+            out = (k + 1) // 2 + _SCALE_ZERO_BYTES * d_model
+        if k < total:
+            out += _INDEX_BYTES * k
+        return out
+
+    def cost_ratio(self, seq_len: int, d_model: int, itemsize: int) -> float:
+        """Wire bytes over full-dtype activation bytes — the factor the
+        controller applies to the paper's communication cost ``o``."""
+        return (self.row_bytes(seq_len, d_model, itemsize)
+                / float(seq_len * d_model * itemsize))
+
+    # ------------------------------------------------------------- encode
+
+    def encode(self, rows: np.ndarray) -> EncodedRows:
+        """rows: (k, S, D) activations -> wire payload."""
+        rows = np.asarray(rows)
+        k, s, d = rows.shape
+        dtype = rows.dtype
+        x = rows.astype(np.float32)
+        total = s * d
+        kept = self.kept(s, d)
+        index = None
+        if kept < total:
+            flat = x.reshape(k, total)
+            # largest-|x| first; stable sort -> deterministic, and equal
+            # magnitudes keep the lowest flat index
+            order = np.argsort(-np.abs(flat), axis=1, kind="stable")
+            index = np.sort(order[:, :kept], axis=1).astype(np.int32)
+            mask = np.zeros((k, total), bool)
+            np.put_along_axis(mask, index, True, axis=1)
+            x = np.where(mask, flat, np.float32(0.0)).reshape(k, s, d)
+        if self.quant == "none":
+            if index is None:
+                return EncodedRows(self, (k, s, d), dtype, rows.copy())
+            vals = np.take_along_axis(
+                x.reshape(k, total), index, axis=1).astype(dtype)
+            return EncodedRows(self, (k, s, d), dtype, vals, index=index)
+        qmin, qmax = _QRANGE[self.quant]
+        xmin = x.min(axis=1)                                 # (k, D)
+        xmax = x.max(axis=1)
+        scale = ((xmax - xmin) / (qmax - qmin)).astype(np.float32)
+        scale = np.where(scale > 0.0, scale, np.float32(1.0))
+        zero = (qmin - xmin / scale).astype(np.float32)
+        q = np.clip(np.rint(x / scale[:, None, :] + zero[:, None, :]),
+                    qmin, qmax).astype(np.int8).reshape(k, total)
+        if index is not None:
+            q = np.take_along_axis(q, index, axis=1)         # (k, kept)
+        data = _pack_int4(q) if self.quant == "int4" else q
+        return EncodedRows(self, (k, s, d), dtype, data,
+                           scale=scale, zero=zero, index=index)
+
+    # ------------------------------------------------------------- decode
+
+    def decode(self, enc: EncodedRows) -> np.ndarray:
+        """Wire payload -> (k, S, D) in the original dtype (the cloud-side
+        view; dropped entries are exactly 0.0, quantized entries are the
+        affine reconstruction x_hat = (q - zero) * scale)."""
+        k, s, d = enc.shape
+        total = s * d
+        kept = enc.index.shape[1] if enc.index is not None else total
+        if self.quant == "none":
+            if enc.index is None:
+                return enc.data.copy()
+            flat = np.zeros((k, total), np.float32)
+            np.put_along_axis(flat, enc.index,
+                              enc.data.astype(np.float32), axis=1)
+            return flat.reshape(k, s, d).astype(enc.dtype)
+        if self.quant == "int4":
+            q = _unpack_int4(enc.data, kept).astype(np.float32)
+        else:
+            q = enc.data.astype(np.float32)
+        if enc.index is None:
+            x = ((q.reshape(k, s, d) - enc.zero[:, None, :])
+                 * enc.scale[:, None, :])
+        else:
+            ch = enc.index % d                               # channel of each kept entry
+            vals = ((q - np.take_along_axis(enc.zero, ch, axis=1))
+                    * np.take_along_axis(enc.scale, ch, axis=1))
+            flat = np.zeros((k, total), np.float32)
+            np.put_along_axis(flat, enc.index, vals, axis=1)
+            x = flat.reshape(k, s, d)
+        return x.astype(enc.dtype)
+
+
+def codec_from_fields(quant: str, sparsity: float) -> Optional[OffloadCodec]:
+    """None for the identity config, so callers keep today's exact
+    (codec-free) path — mirrors `_controller_kwargs` in serving/api.py."""
+    if quant == "none" and sparsity == 0.0:
+        return None
+    return OffloadCodec(quant=quant, sparsity=sparsity)

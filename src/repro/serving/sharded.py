@@ -58,7 +58,8 @@ from repro.core.rewards import CostModel
 from repro.data.stream import microbatches
 from repro.launch.mesh import make_serving_mesh
 from repro.launch.shardings import param_shardings, sanitize_spec
-from repro.serving.batched import OffloadQueue
+from repro.serving.batched import OffloadQueue, _offload_scale
+from repro.serving.offload_codec import OffloadCodec
 from repro.serving.simulator import EdgeCloudRuntime
 
 
@@ -174,18 +175,23 @@ def _drive_pipeline(stream, *, batch_size: int, max_samples: int,
     return driver.batches
 
 
-def _resolve_cloud(runtime: EdgeCloudRuntime, ctx: _BatchCtx):
+def _resolve_cloud(ctx: _BatchCtx):
     """Resolve ctx's cloud flush: patch cloud predictions into
-    ``ctx.batch_preds`` and return (conf_Ls, offload_bytes) per slot."""
+    ``ctx.batch_preds`` and return (conf_Ls, offload_bytes) per slot.
+
+    Bytes come from the flush's own measured payload
+    (``PendingFlush.slot_bytes``, recorded at dispatch), not re-derived
+    from the config dtype — so accounting cannot drift from what was
+    actually transmitted (it used to charge
+    ``runtime.offload_bytes(1, seq_len)`` regardless of the payload)."""
     size = len(ctx.arms)
     cloud = ctx.pending.resolve()
     conf_Ls: List[Optional[float]] = [None] * size
-    ob = runtime.offload_bytes(1, ctx.seq_len)
     obs = [0] * size
     for s, (c_L, p_L) in cloud.items():
         conf_Ls[s] = c_L
         ctx.batch_preds[s] = p_L
-        obs[s] = ob
+        obs[s] = ctx.pending.slot_bytes[s]
     return conf_Ls, obs
 
 
@@ -238,7 +244,8 @@ class _ShardedSession:
                  overlap_depth: int = 1, side_info: bool = False,
                  beta: float = 1.0, labels_for_accounting: bool = True,
                  record_trace: bool = False, edge_mode: str = "bucketed",
-                 controller_kwargs: Optional[Dict[str, Any]] = None):
+                 controller_kwargs: Optional[Dict[str, Any]] = None,
+                 codec: Optional[OffloadCodec] = None):
         from repro.serving.scan_edge import select_edge_phase
         if replicas < 1:
             raise ValueError(f"replicas must be >= 1, got {replicas}")
@@ -273,7 +280,9 @@ class _ShardedSession:
 
         self.ctl = SplitEEController(cost, beta=beta, side_info=side_info,
                                      **(controller_kwargs or {}))
-        self.queue = OffloadQueue(runtime, self.params, put=self.put)
+        self.codec = codec
+        self.queue = OffloadQueue(runtime, self.params, put=self.put,
+                                  codec=codec)
         self.correct: List[int] = []
         self.preds: List[int] = []
         self.trace: Optional[Dict[str, list]] = (
@@ -311,7 +320,8 @@ class _ShardedSession:
     def _finalize(self, ctx: _BatchCtx):
         """Resolve the cloud flush, merge per-replica stats, book results."""
         B = len(ctx.arms)
-        conf_Ls, obs = _resolve_cloud(self.runtime, ctx)
+        conf_Ls, obs = _resolve_cloud(ctx)
+        scale = _offload_scale(self.codec, self.runtime, ctx.seq_len)
         # per-replica shard summaries, merged at the batch boundary
         shards = []
         lo = 0
@@ -323,7 +333,8 @@ class _ShardedSession:
                 # controller's own round counter would lag the trace
                 shards.append(self.ctl.prepare_shard_update(
                     ctx.arms[lo:hi], ctx.conf_paths[lo:hi],
-                    conf_Ls[lo:hi], obs[lo:hi], round=ctx.start))
+                    conf_Ls[lo:hi], obs[lo:hi], round=ctx.start,
+                    offload_scale=scale))
             lo = hi
         self.ctl.merge_shard_updates(shards)
         self.preds.extend(ctx.batch_preds)
@@ -374,6 +385,7 @@ def _serve_stream_sharded(runtime: EdgeCloudRuntime, params, stream,
                           record_trace: bool = False,
                           edge_mode: str = "bucketed",
                           controller_kwargs: Optional[Dict[str, Any]] = None,
+                          codec: Optional[OffloadCodec] = None,
                           ) -> Dict[str, Any]:
     """Offline driver: replay a finite stream through a sharded session.
 
@@ -400,7 +412,7 @@ def _serve_stream_sharded(runtime: EdgeCloudRuntime, params, stream,
                            beta=beta,
                            labels_for_accounting=labels_for_accounting,
                            record_trace=record_trace, edge_mode=edge_mode,
-                           controller_kwargs=controller_kwargs)
+                           controller_kwargs=controller_kwargs, codec=codec)
     for batch in microbatches(stream, batch_size, max_samples):
         sess.push(batch)
     sess.drain()

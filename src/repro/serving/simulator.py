@@ -29,21 +29,31 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.controller import SplitEEController
 from repro.core.rewards import CostModel
-from repro.kernels.exit_confidence.ops import exit_confidence
+from repro.kernels.exit_confidence.ops import (exit_confidence,
+                                               exit_confidence_fused)
 from repro.models.common import apply_norm
 from repro.models.transformer import (_exit_w, _layer_full, _positions,
                                       embed_inputs, forward_exits_masked,
                                       pool_hidden)
+from repro.serving.offload_codec import OffloadCodec
 
 
 @dataclasses.dataclass
 class EdgeCloudRuntime:
     cfg: ModelConfig
     backend: str = "ref"
+    # backend for the exit-confidence decision op ("ref" | "pallas" |
+    # "pallas_interpret") and whether to run it as the fused epilogue
+    # (norm + head + online softmax in one program) instead of the
+    # unfused apply_norm -> exit_confidence pair
+    conf_backend: str = "ref"
+    fused_exit: bool = False
 
     def __post_init__(self):
         cfg = self.cfg
         backend = self.backend
+        conf_backend = self.conf_backend
+        fused_exit = self.fused_exit
 
         def run_layers(params, x, positions, start, stop):
             def body(i, xx):
@@ -56,10 +66,17 @@ class EdgeCloudRuntime:
         def exit_at(params, x, depth):
             """Exit observables at 1-indexed layer = depth (0-idx arm)."""
             lp = jax.tree.map(lambda a: a[depth], params["layers"])
+            w = _exit_w(params, lp)
+            if fused_exit:
+                # pooling commutes with the per-token norm, so the fused
+                # epilogue takes the raw pooled hidden
+                return exit_confidence_fused(pool_hidden(cfg, x),
+                                             lp["exit_norm"], w,
+                                             kind=cfg.norm,
+                                             backend=conf_backend)
             hn = apply_norm(x, lp["exit_norm"], cfg.norm)
             pooled = pool_hidden(cfg, hn)
-            w = _exit_w(params, lp)
-            return exit_confidence(pooled, w)
+            return exit_confidence(pooled, w, backend=conf_backend)
 
         @jax.jit
         def edge_fn(params, batch, depth):
@@ -80,7 +97,7 @@ class EdgeCloudRuntime:
             xf = apply_norm(x, params["final_norm"], cfg.norm)
             pooled = pool_hidden(cfg, xf)
             w = _exit_w(params, lp_last)
-            return exit_confidence(pooled, w)
+            return exit_confidence(pooled, w, backend=conf_backend)
 
         @jax.jit
         def edge_fn_s(params, batch, depth):
@@ -97,18 +114,40 @@ class EdgeCloudRuntime:
                 xx2, _ = _layer_full(cfg, params, lp, xx, pos, i,
                                      window=0, backend=backend)
                 xx = jnp.where(i <= depth, xx2, xx)
-                pooled = pool_hidden(
-                    cfg, apply_norm(xx, lp["exit_norm"], cfg.norm))
-                return xx, pooled
+                src = xx if fused_exit else apply_norm(
+                    xx, lp["exit_norm"], cfg.norm)
+                return xx, pool_hidden(cfg, src)
 
             idx = jnp.arange(cfg.num_layers)
             x, pooled = jax.lax.scan(body, x, (params["layers"], idx))
             l, bb, d = pooled.shape
-            if cfg.exits.share_head or not cfg.exits.enabled:
+            share = cfg.exits.share_head or not cfg.exits.enabled
+            if fused_exit:
+                # raw pooled rows (l*bb, d); row l*bb+b normalizes with
+                # layer l's exit norm, so repeat each (D,) scale bb times
+                norm_p = params["layers"]["exit_norm"]
+                rows_p = jax.tree.map(lambda a: jnp.repeat(a, bb, axis=0),
+                                      norm_p)
+                if share:
+                    conf, pred = exit_confidence_fused(
+                        pooled.reshape(l * bb, d), rows_p,
+                        params["exit_w"], kind=cfg.norm,
+                        backend=conf_backend)
+                else:
+                    conf, pred = jax.vmap(
+                        lambda p, npar, wl: exit_confidence_fused(
+                            p, npar, wl, kind=cfg.norm,
+                            backend=conf_backend))(
+                        pooled, norm_p, params["layers"]["exit_w"])
+                    conf, pred = conf.reshape(l * bb), pred.reshape(l * bb)
+            elif share:
                 conf, pred = exit_confidence(pooled.reshape(l * bb, d),
-                                             params["exit_w"])
+                                             params["exit_w"],
+                                             backend=conf_backend)
             else:
-                conf, pred = jax.vmap(exit_confidence)(
+                conf, pred = jax.vmap(
+                    lambda p, wl: exit_confidence(
+                        p, wl, backend=conf_backend))(
                     pooled, params["layers"]["exit_w"])
                 conf, pred = conf.reshape(l * bb), pred.reshape(l * bb)
             x_at_depth = None  # S-variant offloads from `depth` too
@@ -125,7 +164,9 @@ class EdgeCloudRuntime:
             Unlike `edge_fn`, the compiled program does not depend on
             the depth values at all — only on the batch shape."""
             out = forward_exits_masked(params, cfg, batch, depths,
-                                       backend=backend, window=0)
+                                       backend=backend, window=0,
+                                       conf_backend=conf_backend,
+                                       fused_exit=fused_exit)
             return out["conf"], out["pred"], out["hidden"]
 
         self.edge_fn = edge_fn
@@ -143,9 +184,15 @@ def _serve_stream_sequential(runtime: EdgeCloudRuntime, params, stream,
                              beta: float = 1.0, max_samples: int = 0,
                              labels_for_accounting: bool = True,
                              controller_kwargs: Optional[Dict[str, Any]] = None,
+                             codec: Optional[OffloadCodec] = None,
                              ) -> Dict[str, Any]:
     """Stream samples through the online SplitEE controller + edge/cloud
     runtime. Unsupervised: labels (if present) are used only for reporting.
+
+    With a ``codec``, the offload payload is encoded/decoded at the
+    edge->cloud handoff (the cloud sees the lossy reconstruction) and both
+    the byte accounting and the bandit's communication cost use the wire
+    bytes actually shipped.
     """
     cfg = runtime.cfg
     ctl = SplitEEController(cost, beta=beta, side_info=side_info,
@@ -169,14 +216,27 @@ def _serve_stream_sequential(runtime: EdgeCloudRuntime, params, stream,
         conf_i = float(conf_path[-1])
         will_exit = (conf_i >= cost.alpha) or (arm + 1 == cost.num_layers)
         conf_L = None
+        ob = 0
+        # scale applies to the communication term of EVERY arm's reward
+        # (counterfactual offloads ship through the same codec), so it
+        # depends only on the codec + shape, not on this sample's decision
+        scale = (1.0 if codec is None else
+                 codec.cost_ratio(tokens.shape[1], cfg.d_model,
+                                  jnp.dtype(cfg.dtype).itemsize))
         if not will_exit:
+            if codec is None:
+                ob = runtime.offload_bytes(1, tokens.shape[1])
+            else:
+                enc = codec.encode(np.asarray(hidden))
+                hidden = jnp.asarray(codec.decode(enc))
+                ob = enc.row_bytes
             conf_L_v, pred_L = runtime.cloud_fn(params, hidden,
                                                 jnp.int32(arm))
             conf_L = float(conf_L_v[0])
             pred_i = int(pred_L[0])
-        ob = runtime.offload_bytes(1, tokens.shape[1])
         ctl.update(arm, conf_path, conf_L,
-                   offload_bytes=0 if will_exit else ob)
+                   offload_bytes=0 if will_exit else ob,
+                   offload_scale=scale)
         preds.append(pred_i)
         if labels_for_accounting and "labels" in sample:
             correct.append(int(pred_i == int(sample["labels"])))

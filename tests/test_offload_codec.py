@@ -1,0 +1,188 @@
+"""Offload codec (serving/offload_codec.py): quantization error bounds,
+the closed-form `row_bytes` pinned against measured payload sizes, int4
+nibble packing, top-|x| sparsification semantics, determinism, and the
+identity-config contract (`codec_from_fields` returning None keeps the
+legacy byte accounting bitwise-intact)."""
+import numpy as np
+import pytest
+
+from repro.serving.offload_codec import (EncodedRows, OffloadCodec,
+                                         codec_from_fields)
+
+SHAPES = [(1, 4, 8), (3, 16, 32), (2, 7, 5), (4, 1, 64)]
+QUANTS = ["none", "int8", "int4"]
+SPARSITIES = [0.0, 0.25, 0.5, 0.9]
+
+
+def _rows(shape, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * 3.0).astype(dtype)
+
+
+# ------------------------------------------------------------- validation
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="quant.*int2"):
+        OffloadCodec(quant="int2")
+    with pytest.raises(ValueError, match="sparsity"):
+        OffloadCodec(sparsity=1.0)
+    with pytest.raises(ValueError, match="sparsity"):
+        OffloadCodec(sparsity=-0.1)
+
+
+def test_codec_from_fields_identity_is_none():
+    """The pure-default config maps to no codec at all: the runtimes keep
+    their legacy (bitwise-identical) flush path."""
+    assert codec_from_fields("none", 0.0) is None
+    assert codec_from_fields("int8", 0.0) is not None
+    assert codec_from_fields("none", 0.5) is not None   # sparsify-only
+
+
+def test_identity_property():
+    assert OffloadCodec().identity
+    assert not OffloadCodec(quant="int8").identity
+    assert not OffloadCodec(sparsity=0.25).identity
+
+
+# ----------------------------------------------------------- round-trips
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_none_codec_roundtrip_bitwise(shape, dtype):
+    x = _rows(shape, dtype=dtype)
+    codec = OffloadCodec()
+    out = codec.decode(codec.encode(x))
+    assert out.dtype == x.dtype
+    np.testing.assert_array_equal(out, x)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_int8_error_bounded_by_half_scale(shape):
+    """Affine round-to-nearest: |x - x̂| <= scale/2 per channel."""
+    x = _rows(shape)
+    codec = OffloadCodec(quant="int8")
+    enc = codec.encode(x)
+    out = codec.decode(enc)
+    # scale is stored per (row, channel) and bounds the error of every
+    # entry in that channel's sequence
+    assert enc.scale.shape == (x.shape[0], x.shape[2])
+    err = np.abs(out - x)                                  # (k, S, D)
+    bound = np.broadcast_to(enc.scale[:, None, :] / 2 + 1e-6, x.shape)
+    np.testing.assert_array_less(err, bound)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_int4_error_bounded_by_half_scale(shape):
+    x = _rows(shape, seed=1)
+    codec = OffloadCodec(quant="int4")
+    enc = codec.encode(x)
+    out = codec.decode(enc)
+    err = np.abs(out - x)
+    assert err.max() <= enc.scale.max() / 2 + 1e-6
+    # int4 is 16 levels: coarser than int8 on the same data
+    enc8 = OffloadCodec(quant="int8").encode(x)
+    assert enc8.scale.max() <= enc.scale.max() + 1e-12
+
+
+def test_int4_packing_odd_counts():
+    """Odd kept-counts exercise the trailing half-filled pack byte."""
+    x = _rows((1, 3, 5), seed=2)                           # 15 entries/row
+    codec = OffloadCodec(quant="int4")
+    out = codec.decode(codec.encode(x))
+    assert out.shape == x.shape
+    assert np.abs(out - x).max() < 1.0
+
+
+def test_constant_channel_zero_scale_guard():
+    """A constant channel has xmax == xmin: the zero-range guard must not
+    divide by zero, and the channel must reconstruct exactly."""
+    x = np.full((2, 8, 4), 3.25, np.float32)
+    for quant in ("int8", "int4"):
+        out = OffloadCodec(quant=quant).decode(
+            OffloadCodec(quant=quant).encode(x))
+        np.testing.assert_allclose(out, x, atol=1e-6)
+
+
+# ------------------------------------------------------------- sparsity
+
+@pytest.mark.parametrize("sparsity", [0.25, 0.5, 0.9])
+def test_sparsity_keeps_topk_by_magnitude(sparsity):
+    x = _rows((2, 8, 16), seed=3)
+    codec = OffloadCodec(sparsity=sparsity)
+    enc = codec.encode(x)
+    out = codec.decode(enc)
+    total = x.shape[1] * x.shape[2]
+    kept = codec.kept(x.shape[1], x.shape[2])
+    assert kept == max(1, total - int(round(sparsity * total)))
+    for r in range(x.shape[0]):
+        flat, rec = np.abs(x[r]).ravel(), out[r].ravel()
+        nz = np.flatnonzero(rec)
+        assert len(nz) <= kept
+        # every kept entry outranks (>=) every dropped one
+        if len(nz) and len(nz) < total:
+            assert flat[nz].min() >= np.delete(flat, nz).max() - 1e-6
+        # dropped entries decode to exactly 0.0
+        assert (rec[np.setdiff1d(np.arange(total), nz)] == 0.0).all()
+        # survivors reconstruct exactly under quant="none"
+        np.testing.assert_array_equal(rec[nz], x[r].ravel()[nz])
+
+
+def test_sparse_plus_quant_composes():
+    x = _rows((2, 8, 16), seed=4)
+    codec = OffloadCodec(quant="int8", sparsity=0.5)
+    out = codec.decode(codec.encode(x))
+    dropped = out == 0.0
+    assert dropped.sum() >= x.size // 2 - x.shape[0]       # ~half dropped
+    kept_err = np.abs(out - x)[~dropped]
+    assert kept_err.max() < 0.5                            # quantized kept
+
+
+# -------------------------------------------------- byte accounting pins
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("quant", QUANTS)
+@pytest.mark.parametrize("sparsity", [0.0, 0.5])
+def test_row_bytes_closed_form_matches_measured(shape, quant, sparsity):
+    """The accounting the runtimes charge (`row_bytes(S, D, itemsize)`)
+    must equal the bytes of the payload actually produced."""
+    codec = OffloadCodec(quant=quant, sparsity=sparsity)
+    for dtype in (np.float32, np.float16):
+        x = _rows(shape, dtype=dtype)
+        enc = codec.encode(x)
+        assert isinstance(enc, EncodedRows)
+        assert enc.row_bytes == codec.row_bytes(
+            shape[1], shape[2], np.dtype(dtype).itemsize)
+        assert enc.nbytes == enc.row_bytes * shape[0]
+
+
+def test_cost_ratio_int8_dense_at_least_2x():
+    """Acceptance pin: dense int8 on f32 activations ships >= 2x fewer
+    bytes than the raw payload (1 byte/entry + per-channel scale/zero)."""
+    for s, d in [(16, 32), (64, 128), (128, 256)]:
+        assert OffloadCodec(quant="int8").cost_ratio(s, d, 4) <= 0.5
+        assert OffloadCodec(quant="int4").cost_ratio(s, d, 4) \
+            <= OffloadCodec(quant="int8").cost_ratio(s, d, 4)
+    assert OffloadCodec().cost_ratio(16, 32, 4) == 1.0
+
+
+def test_sparse_index_overhead_is_counted():
+    """Sparsity adds 4 index bytes per kept entry — the ratio must
+    reflect it (it is NOT free compression)."""
+    dense = OffloadCodec(quant="int8")
+    sparse = OffloadCodec(quant="int8", sparsity=0.1)
+    assert sparse.row_bytes(32, 64, 4) > dense.row_bytes(32, 64, 4)
+
+
+# ---------------------------------------------------------- determinism
+
+def test_encode_deterministic_including_ties():
+    """Stable top-k: equal-magnitude entries are kept lowest-index-first,
+    so two encodes of the same payload are byte-identical (distributed
+    hosts must agree on the wire payload)."""
+    x = np.ones((2, 4, 8), np.float32)                     # all tied
+    codec = OffloadCodec(quant="int8", sparsity=0.5)
+    a, b = codec.encode(x), codec.encode(x)
+    np.testing.assert_array_equal(a.data, b.data)
+    np.testing.assert_array_equal(a.index, b.index)
+    kept = codec.kept(4, 8)
+    np.testing.assert_array_equal(a.index[0], np.arange(kept))
