@@ -1,0 +1,165 @@
+"""Decode-serving benchmark: per-token SplitEE vs final-layer-always.
+
+For each arch (an attention family and a recurrent family), the same
+prompt stream is generated twice through ``serve(workload="decode")``:
+
+* ``split_policy="final"`` — every token runs the full depth on the
+  edge; the bit-identical stand-in for conventional on-device decode
+  (the differential pin in tests/test_decode_serving.py).
+* ``split_policy="bandit"`` — the per-token UCB policy: exit shallow
+  when the exit head is confident, offload the split-layer hidden plus
+  the ≤ℓ cache slice otherwise.
+
+Reported per (arch, policy): tokens/sec, SplitEE cost total (the
+paper's layer+communication units), mean wire bytes per sequence, and —
+for the bandit row — the token match rate against the final-always
+output (the measured accuracy delta of early exit: matched tokens are
+bitwise the full-depth choice) plus the cost reduction bought at that
+delta. The run asserts the bandit's cost_total is strictly below
+final-always on every arch.
+
+Results print as CSV lines and land in ``BENCH_serve_decode.json``
+(schema in benchmarks/README.md).
+
+    PYTHONPATH=src:. python benchmarks/serve_decode.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import CostModel
+from repro.models.api import build_model
+from repro.serving import DecodeRuntime, ServingConfig, serve
+
+ARCHS = ["qwen3-1.7b", "rwkv6-3b"]
+BATCH = 8
+EXIT_RATE = 0.85        # calibration target: shallow-exit frequency
+OFFLOAD = 1.0           # o in lambda units (paper sweeps 1..5)
+
+
+def _prompts(cfg, n, seq_len, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"tokens": rng.integers(0, cfg.vocab_size, size=seq_len)}
+            for _ in range(n)]
+
+
+def _calibrate_alpha(rt, params, cfg, stream, new_tokens):
+    """alpha as a quantile of the shallow exits' observed confidences, so
+    a target fraction of decode steps exits early — the decode analogue
+    of `core.calibrate_alpha` (there is no LM fine-tuning step in this
+    repo, so the exit heads are calibrated rather than trained)."""
+    import jax.numpy as jnp
+    prompts = np.stack([np.asarray(s["tokens"], np.int32)
+                        for s in stream[:BATCH]])
+    total = prompts.shape[1] + new_tokens
+    logits0, caches = rt.prefill_fn(params, jnp.asarray(prompts), total)
+    tok = jnp.argmax(logits0, -1).astype(jnp.int32)
+    depths = jnp.full((prompts.shape[0],), cfg.num_layers - 1, jnp.int32)
+    confs = []
+    for t in range(new_tokens):
+        _, conf, _, _, pred_fin, _, caches = rt.edge_fn(
+            params, caches, tok, prompts.shape[1] + t, depths, total)
+        confs.append(np.asarray(conf)[:-1].ravel())    # shallow exits
+        tok = pred_fin
+    return float(np.quantile(np.concatenate(confs), 1.0 - EXIT_RATE))
+
+
+def run_arch(arch: str, *, prompts: int, seq_len: int, new_tokens: int):
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    rt = DecodeRuntime(cfg)
+    stream = _prompts(cfg, prompts, seq_len)
+    alpha = _calibrate_alpha(rt, params, cfg, stream, new_tokens)
+    cost = CostModel(num_layers=cfg.num_layers, alpha=alpha,
+                     offload=OFFLOAD)
+
+    reports = {}
+    for policy in ("final", "bandit"):
+        scfg = ServingConfig(batch_size=BATCH, workload="decode",
+                             max_new_tokens=new_tokens,
+                             split_policy=policy)
+        serve(rt, params, iter(stream), cost, scfg)   # warmup/compile
+        reports[policy] = serve(rt, params, iter(stream), cost, scfg)
+
+    ref_tokens = np.asarray(reports["final"].decode["tokens"])
+    rows = []
+    for policy in ("final", "bandit"):
+        rep = reports[policy]
+        dec = rep.decode
+        match = float((np.asarray(dec["tokens"]) == ref_tokens).mean())
+        rows.append({
+            "arch": arch,
+            "alpha": round(alpha, 5),
+            "split_policy": policy,
+            "sequences": int(dec["sequences"]),
+            "tokens_generated": int(dec["tokens_generated"]),
+            "tokens_per_sec": round(float(dec["tokens_per_sec"]), 2),
+            "cost_total": round(float(rep.cost_total), 3),
+            "offload_frac": round(float(rep.offload_frac), 4),
+            "mean_offloads_per_sequence": round(
+                float(dec["offloads_per_sequence"].mean()), 3),
+            "mean_wire_bytes_per_sequence": round(
+                float(dec["wire_bytes_per_sequence"].mean()), 1),
+            "token_match_rate_vs_final": round(match, 4),
+            "cost_reduction_vs_final": round(
+                1.0 - rep.cost_total / reports["final"].cost_total, 4),
+        })
+    bandit, final = rows[1], rows[0]
+    assert bandit["cost_total"] < final["cost_total"], (
+        f"{arch}: bandit cost {bandit['cost_total']} not below "
+        f"final-always {final['cost_total']}")
+    return rows
+
+
+def run(*, prompts: int, seq_len: int, new_tokens: int,
+        out_path: str = "BENCH_serve_decode.json"):
+    rows = []
+    for arch in ARCHS:
+        rows.extend(run_arch(arch, prompts=prompts, seq_len=seq_len,
+                             new_tokens=new_tokens))
+    for r in rows:
+        print(f"serve_decode/{r['arch']}/{r['split_policy']},"
+              f"{r['tokens_per_sec']:.1f} tok/s,"
+              f"cost={r['cost_total']:.1f},"
+              f"wire={r['mean_wire_bytes_per_sequence']:.0f} B/seq,"
+              f"match={r['token_match_rate_vs_final']:.3f},"
+              f"saving={r['cost_reduction_vs_final']:.3f}")
+    if out_path:
+        artifact = {
+            "benchmark": "serve_decode",
+            "config": {"archs": ARCHS, "exit_rate_target": EXIT_RATE,
+                       "offload_lambda": OFFLOAD, "batch_size": BATCH,
+                       "prompts": prompts, "seq_len": seq_len,
+                       "new_tokens": new_tokens},
+            "results": rows,
+        }
+        with open(out_path, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"wrote {out_path}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--prompts", type=int, default=32)
+    ap.add_argument("--seq-len", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run for CI: few prompts/tokens")
+    ap.add_argument("--out", default="BENCH_serve_decode.json",
+                    help="JSON artifact path ('' disables)")
+    args = ap.parse_args()
+    if args.smoke:
+        args.prompts, args.new_tokens = 8, 3
+    run(prompts=args.prompts, seq_len=args.seq_len,
+        new_tokens=args.new_tokens, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

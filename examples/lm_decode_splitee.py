@@ -1,70 +1,86 @@
-"""SplitEE on an assigned LM architecture's decode path.
+"""SplitEE on an assigned LM architecture's decode path, through the
+serving runtime.
 
-Shows the technique as a first-class serving feature on rwkv6 (attention-
-free: the offload payload is the tiny recurrent state, the most favourable
-case for split computing): each decode step evaluates the fused
-exit-confidence at the bandit's splitting layer; confident tokens would be
-emitted by the edge half, the rest offloaded.
+Generation runs behind ``serve(workload="decode")`` (serving/decode.py):
+every decode step evaluates the exit head at the bandit's splitting
+layer; confident tokens are emitted by the edge half, the rest ship the
+split-layer hidden plus the <= split cache slice to the cloud, which
+finishes the step and returns the state the edge re-syncs from
+(serving/kvcache.py keeps the KV cache consistent across the mix — see
+docs/SERVING.md, "Decode workloads").
 
-    PYTHONPATH=src python examples/lm_decode_splitee.py --tokens 48
+The default arch is rwkv6 (attention-free: the offloaded recurrent state
+is tiny, the most favourable case for split computing); try
+``--arch qwen3-1.7b`` for the attention-family payload instead.
+
+    PYTHONPATH=src python examples/lm_decode_splitee.py --tokens 16
 """
 import argparse
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core import CostModel
-from repro.core.controller import SplitEEController
 from repro.models.api import build_model
+from repro.serving import DecodeRuntime, ServingConfig, serve
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="rwkv6-3b")
-    ap.add_argument("--tokens", type=int, default=48)
-    ap.add_argument("--alpha", type=float, default=0.02)
+    ap.add_argument("--tokens", type=int, default=16,
+                    help="tokens generated per prompt")
+    ap.add_argument("--prompts", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=6)
+    ap.add_argument("--alpha", type=float, default=0.02,
+                    help="exit threshold (untrained weights, so near "
+                         "chance)")
+    ap.add_argument("--quant", default="none",
+                    choices=["none", "int8", "int4"],
+                    help="offload payload codec (with error feedback "
+                         "when lossy)")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(get_smoke_config(args.arch), dtype="float32")
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    runtime = DecodeRuntime(cfg)
     print(f"{args.arch} (reduced): {cfg.num_layers} layers, "
           f"d={cfg.d_model}, vocab={cfg.vocab_size} — untrained weights, "
           f"so alpha is set near chance ({args.alpha})")
 
     cost = CostModel(num_layers=cfg.num_layers, alpha=args.alpha,
                      offload=3.0)
-    ctl = SplitEEController(cost, beta=1.0)
+    rng = np.random.default_rng(0)
+    prompts = [{"tokens": rng.integers(0, cfg.vocab_size,
+                                       size=args.prompt_len)}
+               for _ in range(args.prompts)]
+    scfg = ServingConfig(workload="decode", max_new_tokens=args.tokens,
+                         batch_size=args.prompts,
+                         offload_quant=args.quant,
+                         offload_error_feedback=args.quant != "none")
 
-    B = 1
-    caches = model.init_caches(B, args.tokens + 1)
-    tok = jnp.zeros((B,), jnp.int32)
-    decode = jax.jit(lambda p, c, t, i, s: model.decode_step(
-        p, c, t, i, split_layer=s, window_seq_len=args.tokens + 1))
-    exits = 0
-    for t in range(args.tokens):
-        arm = ctl.choose_split()
-        logits, conf, pred, caches = decode(params, caches, tok,
-                                            jnp.int32(t), arm)
-        conf_i = float(conf[0])
-        # final-layer confidence from the same step's full path (the
-        # "cloud" result — free here because the dry-run computes both)
-        conf_L = float(jax.nn.softmax(logits[0]).max())
-        exited = ctl.update(arm, np.asarray([conf_i]),
-                            None if conf_i >= cost.alpha else conf_L)
-        exits += int(exited)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        if t < 5 or t == args.tokens - 1:
-            print(f"  t={t:3d} split_layer={arm + 1:2d} conf={conf_i:.3f} "
-                  f"{'EXIT on edge' if exited else 'offload -> cloud'}")
-    h = ctl.history
-    print(f"decoded {args.tokens} tokens: {exits} exited on edge, "
-          f"{args.tokens - exits} offloaded; total cost "
-          f"{sum(h['cost']):.1f}λ  "
-          f"(final-exit would be {cost.lam * cfg.num_layers * args.tokens:.1f}λ)")
+    out = serve(runtime, params, iter(prompts), cost, scfg)
+
+    dec = out.decode
+    depths = np.asarray(dec["realized_depths"])      # (B, T), 0-based
+    exited = np.asarray(dec["exited_steps"])
+    for t in range(min(5, args.tokens)):
+        n_exit = int(exited[:, t].sum())
+        print(f"  t={t:3d} mean_split_layer={depths[:, t].mean() + 1:5.2f} "
+              f"{n_exit}/{args.prompts} EXIT on edge, "
+              f"{args.prompts - n_exit} offload -> cloud")
+    final_cost = cost.lam * cfg.num_layers * dec["tokens_generated"]
+    print(f"decoded {dec['tokens_generated']} tokens over "
+          f"{dec['sequences']} sequences "
+          f"({dec['tokens_per_sec']:.1f} tok/s): "
+          f"{int(exited.sum())} exited on edge, "
+          f"{int(np.asarray(dec['offloaded_steps']).sum())} offloaded "
+          f"({np.mean(dec['offloads_per_sequence']):.1f}/seq, "
+          f"{np.mean(dec['wire_bytes_per_sequence']) / 1e3:.2f} kB/seq "
+          f"on the wire); total cost {out['cost_total']:.1f}λ "
+          f"(final-exit would be {final_cost:.1f}λ)")
 
 
 if __name__ == "__main__":

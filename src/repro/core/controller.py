@@ -244,9 +244,10 @@ class SplitEEController:
         return float(self.cost_trace.offload_at(round))
 
     def _reward_matrix(self, conf: np.ndarray, chat: np.ndarray,
-                       offload: float):
+                       offload):
         """Vectorized eq. (1) over a (B, L) padded confidence matrix,
-        against the offload cost in effect for this batch.
+        against the offload cost in effect for this batch (scalar, or
+        (L,) when the communication term is per-arm — it broadcasts).
 
         float64 throughout — elementwise the same IEEE ops as the scalar
         reward path, so the fold below reproduces per-sample serving
@@ -286,12 +287,23 @@ class SplitEEController:
         codec it is the deterministic wire-bytes / full-dtype-bytes ratio,
         so the bandit optimizes the cost actually paid. The multiply is
         skipped entirely at the default 1.0, keeping the codec-free path
-        bit-identical.
+        bit-identical. Decode serving passes an (L,) *vector* — the
+        offload payload there includes the per-step ≤ℓ cache slice, so
+        deeper splits genuinely cost more wire — and the per-arm term
+        broadcasts through eq. (1) and the charged costs.
         """
         L = self.cost.num_layers
         B = len(arms)
         offload = self._offload_at(round)
-        if offload_scale != 1.0:
+        scale_vec = None
+        if np.ndim(offload_scale):
+            scale_vec = np.asarray(offload_scale, np.float64)
+            if scale_vec.shape != (L,):
+                raise ValueError(
+                    f"vector offload_scale must be ({L},), got "
+                    f"{scale_vec.shape}")
+            offload = offload * scale_vec
+        elif offload_scale != 1.0:
             offload = offload * float(offload_scale)
         arms = np.asarray(arms, np.int64)
         conf = np.zeros((B, L), np.float64)
@@ -314,8 +326,12 @@ class SplitEEController:
         # matching jnp's weak-type promotion in CostModel.sample_cost)
         g_arm = self.cost.gamma((arms + 1).astype(np.float64),
                                 side_info=self.side_info)
-        c_all = g_arm.astype(np.float32) + np.where(
-            exited, np.float32(0.0), np.float32(offload))
+        if scale_vec is None:
+            c_all = g_arm.astype(np.float32) + np.where(
+                exited, np.float32(0.0), np.float32(offload))
+        else:
+            c_all = g_arm.astype(np.float32) + np.where(
+                exited, np.float32(0.0), offload[arms].astype(np.float32))
         ob = np.where(exited, 0,
                       np.asarray(offload_bytes, np.int64))
         return ShardUpdate(arms=arms, rewards=r_all, exited=exited,

@@ -41,7 +41,8 @@ from repro.core import (CostModel, calibrate_alpha, confidence_cascade,
 from repro.data import OnlineStream, make_dataset
 from repro.data.synthetic import DOMAINS, VOCAB
 from repro.launch.train import exit_accuracy, train_classifier
-from repro.serving import EdgeCloudRuntime, ServingConfig, serve
+from repro.serving import (DecodeRuntime, EdgeCloudRuntime, ServingConfig,
+                           serve)
 from repro.serving.distributed import (ENV_COORDINATOR, ENV_KV_DIR,
                                        cluster_identity,
                                        drive_respawned_cluster,
@@ -91,12 +92,27 @@ def add_serving_config_args(ap: argparse.ArgumentParser):
     ap.add_argument("--batch-size", type=int, default=None,
                     help="micro-batch size B; >1 selects the batched "
                          "delayed-feedback runtime (config: batch_size)")
-    ap.add_argument("--edge-mode", choices=["bucketed", "scan"],
+    ap.add_argument("--edge-mode", choices=["bucketed", "scan", "auto"],
                     default=None,
                     help="edge-phase strategy (config: edge_mode): "
                          "'bucketed' = one pow2-padded launch per distinct "
                          "split depth, 'scan' = one masked scan-over-layers "
-                         "program per batch shape")
+                         "program per batch shape, 'auto' = scan for "
+                         "mixed-depth micro-batches, bucketed otherwise")
+    ap.add_argument("--workload", choices=["classify", "decode"],
+                    default=None,
+                    help="serving workload (config: workload): 'decode' = "
+                         "autoregressive generation with per-token "
+                         "early-exit/offload (see docs/SERVING.md, "
+                         "'Decode workloads')")
+    ap.add_argument("--max-new-tokens", type=int, default=None,
+                    help="tokens generated per prompt (config: "
+                         "max_new_tokens; decode workload only)")
+    ap.add_argument("--split-policy", choices=["bandit", "final"],
+                    default=None,
+                    help="decode split policy (config: split_policy): "
+                         "'final' forces full depth every step — the "
+                         "bit-identical plain-decode baseline")
     ap.add_argument("--mesh", action="store_true", default=None,
                     help="serve through the sharded data-parallel runtime "
                          "on a 1-D device mesh (config: mesh)")
@@ -187,6 +203,12 @@ def serving_config_from_args(args) -> ServingConfig:
         overrides["batch_size"] = args.batch_size
     if args.edge_mode is not None:
         overrides["edge_mode"] = args.edge_mode
+    if args.workload is not None:
+        overrides["workload"] = args.workload
+    if args.max_new_tokens is not None:
+        overrides["max_new_tokens"] = args.max_new_tokens
+    if args.split_policy is not None:
+        overrides["split_policy"] = args.split_policy
     if args.mesh:
         overrides["mesh"] = True
     if args.replicas is not None:
@@ -226,6 +248,72 @@ def serving_config_from_args(args) -> ServingConfig:
     return dataclasses.replace(base, **overrides) if overrides else base
 
 
+DECODE_EXIT_RATE = 0.85     # alpha-calibration target: shallow-exit freq
+
+
+def run_decode(args, scfg: ServingConfig):
+    """Decode workload: stream prompts through the per-token early-exit
+    runtime (serving/decode.py). There is no LM fine-tuning stage in this
+    repo, so the exit heads are confidence-*calibrated* rather than
+    trained: alpha is set from a full-depth probe pass so ~85% of decode
+    steps clear the exit threshold (benchmarks/serve_decode.py uses the
+    same recipe)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models.api import build_model
+
+    cfg = dataclasses.replace(get_smoke_config(args.decode_arch),
+                              dtype="float32")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    runtime = DecodeRuntime(cfg, conf_backend=args.conf_backend)
+
+    n = scfg.max_samples or DEFAULT_SAMPLES
+    rng = np.random.default_rng(0)
+    prompts = [{"tokens": rng.integers(0, cfg.vocab_size,
+                                       size=args.prompt_len)}
+               for _ in range(n)]
+
+    # probe pass: run one batch at full depth, read the shallow exits'
+    # confidences, put alpha at the (1 - target-rate) quantile
+    probe = np.stack([np.asarray(p["tokens"], np.int32)
+                      for p in prompts[:scfg.batch_size]])
+    total = args.prompt_len + scfg.max_new_tokens
+    logits0, caches = runtime.prefill_fn(params, jnp.asarray(probe), total)
+    tok = jnp.argmax(logits0, -1).astype(jnp.int32)
+    depths = jnp.full((probe.shape[0],), cfg.num_layers - 1, jnp.int32)
+    confs = []
+    for t in range(scfg.max_new_tokens):
+        _, conf, _, _, pred_fin, _, caches = runtime.edge_fn(
+            params, caches, tok, args.prompt_len + t, depths, total)
+        confs.append(np.asarray(conf)[:-1].ravel())
+        tok = pred_fin
+    alpha = float(np.quantile(np.concatenate(confs),
+                              1.0 - DECODE_EXIT_RATE))
+    cost = CostModel(num_layers=cfg.num_layers, alpha=alpha,
+                     offload=args.offload)
+    print(f"decode testbed: arch={args.decode_arch} "
+          f"L={cfg.num_layers} calibrated alpha={alpha:.4f}")
+
+    out = serve(runtime, params, iter(prompts), cost, scfg)
+    dec = out.decode
+    depth = float(np.asarray(dec["realized_depths"]).mean()) + 1
+    print(f"SplitEE-decode (policy={scfg.split_policy} "
+          f"B={scfg.batch_size} T={scfg.max_new_tokens}): "
+          f"sequences={dec['sequences']} "
+          f"tokens={dec['tokens_generated']} "
+          f"({dec['tokens_per_sec']:.1f} tok/s) "
+          f"cost={out['cost_total']:.0f}λ "
+          f"offload_frac={out['offload_frac']:.2f} "
+          f"mean_depth={depth:.2f}/{cfg.num_layers} "
+          f"wire={np.mean(dec['wire_bytes_per_sequence'])/1e3:.1f}kB/seq")
+    if out.scheduler:
+        s = out.scheduler
+        print(f"scheduler: served={s['served']} shed={s['shed']} "
+              f"{dict(s['shed_reasons'])}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     add_serving_config_args(ap)
@@ -234,6 +322,11 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--offload", type=float, default=5.0)
     ap.add_argument("--eval-domain", default="imdb_like")
+    ap.add_argument("--decode-arch", default="qwen3-1.7b",
+                    help="LM arch for --workload decode (any decoder-only "
+                         "entry in configs.ARCHS)")
+    ap.add_argument("--prompt-len", type=int, default=8,
+                    help="prompt length for --workload decode")
     ap.add_argument("--conf-backend", default="ref",
                     choices=["ref", "pallas", "pallas_interpret"],
                     help="exit-confidence kernel backend (runtime, not "
@@ -260,6 +353,9 @@ def main():
         with open(args.dump_config, "w") as f:
             f.write(scfg.to_json())
         print(f"wrote serving config to {args.dump_config}")
+    if scfg.workload == "decode":     # never distributed (config rejects)
+        run_decode(args, scfg)
+        return
     if not in_cluster and scfg.distributed:
         if scfg.fault_tolerant:
             # coordinator-free cluster over a FileKV dir: any worker

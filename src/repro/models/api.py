@@ -70,6 +70,32 @@ class Model:
             split_layer=split_layer, all_exits=all_exits,
             window_seq_len=window_seq_len)
 
+    def decode_step_masked(self, params, caches, token, cur_index, depths, *,
+                           window_seq_len: int = 0,
+                           conf_backend: str = "ref"):
+        """Edge half of a decode-serving step: per-sample depth mask, frozen
+        carry/cache above each sample's split layer. See
+        ``transformer.decode_step_masked``."""
+        if self.is_encdec:
+            raise NotImplementedError(
+                "masked decode serving covers decoder-only families; enc-dec"
+                " decode goes through decode_step")
+        return transformer.decode_step_masked(
+            params, self.cfg, caches, token, cur_index, depths,
+            window_seq_len=window_seq_len, conf_backend=conf_backend)
+
+    def decode_step_resume(self, params, caches, hidden, cur_index, depths,
+                           active, *, window_seq_len: int = 0):
+        """Cloud half: resume from the shipped carry, run layers > depth for
+        active samples only. See ``transformer.decode_step_resume``."""
+        if self.is_encdec:
+            raise NotImplementedError(
+                "masked decode serving covers decoder-only families; enc-dec"
+                " decode goes through decode_step")
+        return transformer.decode_step_resume(
+            params, self.cfg, caches, hidden, cur_index, depths, active,
+            window_seq_len=window_seq_len)
+
     # ----------------------------------------------------------- input specs
     def input_specs(self, shape: InputShape) -> Dict[str, Any]:
         """ShapeDtypeStruct stand-ins for every input of the step the shape

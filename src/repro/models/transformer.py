@@ -590,6 +590,207 @@ def decode_step(params, cfg: ModelConfig, caches, token_or_embed,
     return logits, conf, pred, new_caches
 
 
+def _mask_rows(mask, new, old):
+    """Per-sample cache merge: keep ``new`` where ``mask`` (B,) is set, else
+    ``old``. Every cache leaf is batch-leading, so the mask broadcasts by
+    appending singleton axes."""
+    def sel(nw, od):
+        m = mask.reshape(mask.shape + (1,) * (nw.ndim - 1))
+        return jnp.where(m, nw, od)
+    return jax.tree.map(sel, new, old)
+
+
+def decode_step_masked(params, cfg: ModelConfig, caches, token_or_embed,
+                       cur_index, depths, *, window_seq_len: int = 0,
+                       conf_backend: str = "ref"):
+    """Edge half of a decode-serving step: run layers ``0..depths[b]`` per
+    sample, freezing both the hidden carry and the cache slots of deeper
+    layers (a skipped attention layer simply leaves its ring-buffer slot
+    unwritten; the ``pos`` validity mask excludes the hole at future reads,
+    so no per-layer write indices are needed — ``cur_index`` stays global).
+
+    Returns (logits, conf (L, B), pred (L, B), hidden (B, 1, D),
+    new_caches): ``logits`` is the final LM head applied to the (masked)
+    carry — meaningful for samples with depths[b] == L-1; ``conf``/``pred``
+    are every exit head's observables as in ``decode_step(all_exits=True)``;
+    ``hidden`` is the raw carry after each sample's own split layer, the
+    payload a mid-generation offload ships to the cloud.
+    """
+    if token_or_embed.ndim <= 1 or token_or_embed.dtype in (
+            jnp.int32, jnp.int64):
+        x = jnp.take(params["embed"],
+                     token_or_embed.reshape(-1, 1), axis=0)
+    else:
+        x = token_or_embed.astype(jnp.dtype(cfg.dtype))
+    window = cfg.effective_window(window_seq_len)
+    live = depths[:, None, None]
+
+    if cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        sp = params["shared_attn"]
+
+        def body(carry, inp):
+            xx, occ = carry
+            lp, st, i = inp
+            xx2, new_st, _ = _layer_decode(cfg, params, lp, xx, st, cur_index,
+                                           window=window)
+
+            def with_attn(args):
+                xx2, occ = args
+                oi = (i + 1) // k - 1
+                sl = jax.tree.map(lambda a: a[oi], occ)
+                h, new_sl = attn.attn_decode(
+                    sp["attn"], apply_norm(xx2, sp["ln1"], cfg.norm), sl,
+                    cur_index, num_heads=cfg.num_heads,
+                    num_kv_heads=cfg.num_kv_heads,
+                    head_dim=cfg.resolved_head_dim, window=window,
+                    rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm)
+                xx2 = xx2 + h
+                xx2 = xx2 + ff.mlp_forward(
+                    sp["mlp"], apply_norm(xx2, sp["ln2"], cfg.norm),
+                    cfg.activation)
+                # shared cache: advance only the samples whose depth reaches
+                # this layer — frozen rows keep their old slot contents
+                new_sl = _mask_rows(i <= depths, new_sl, sl)
+                occ = jax.tree.map(
+                    lambda buf, ns: jax.lax.dynamic_update_index_in_dim(
+                        buf, ns, oi, 0), occ, new_sl)
+                return xx2, occ
+
+            xx2, occ = jax.lax.cond(jnp.equal(jnp.mod(i + 1, k), 0),
+                                    with_attn, lambda a: a, (xx2, occ))
+            xx = jnp.where(i <= live, xx2, xx)
+            new_st = _mask_rows(i <= depths, new_st, st)
+            pooled = pool_hidden(cfg, apply_norm(xx, lp["exit_norm"],
+                                                 cfg.norm))
+            return (xx, occ), (new_st, pooled)
+
+        idx = jnp.arange(cfg.num_layers)
+        (x, occ), (new_ssm, pooled) = jax.lax.scan(
+            body, (x, caches["attn"]), (params["layers"], caches["ssm"], idx),
+            unroll=_unroll())
+        new_caches = {"ssm": new_ssm, "attn": occ}
+    else:
+        cache_key = "ssm" if cfg.family == "ssm" else "attn"
+
+        def body(xx, inp):
+            lp, st, i = inp
+            xx2, new_st, _ = _layer_decode(cfg, params, lp, xx, st, cur_index,
+                                           window=window)
+            xx = jnp.where(i <= live, xx2, xx)
+            new_st = _mask_rows(i <= depths, new_st, st)
+            pooled = pool_hidden(cfg, apply_norm(xx, lp["exit_norm"],
+                                                 cfg.norm))
+            return xx, (new_st, pooled)
+
+        idx = jnp.arange(cfg.num_layers)
+        x, (new_st, pooled) = jax.lax.scan(
+            body, x, (params["layers"], caches[cache_key], idx),
+            unroll=_unroll())
+        new_caches = {cache_key: new_st}
+
+    shared = cfg.exits.share_head or not cfg.exits.enabled
+    if shared:
+        ew = params["exit_w"]
+        l, bb, d = pooled.shape
+        conf, pred = exit_confidence(pooled.reshape(l * bb, d), ew,
+                                     backend=conf_backend)
+    else:
+        ew = params["layers"]["exit_w"][-1]
+        l, bb, d = pooled.shape
+        conf, pred = jax.vmap(
+            lambda p_i, w_i: exit_confidence(
+                p_i, w_i, backend=conf_backend))(
+            pooled, params["layers"]["exit_w"])
+    conf, pred = conf.reshape(l, bb), pred.reshape(l, bb)
+
+    xf = apply_norm(x, params["final_norm"], cfg.norm)
+    logits = constrain(xf[:, -1, :] @ ew, "batch", "model")
+    return logits, conf, pred, x, new_caches
+
+
+def decode_step_resume(params, cfg: ModelConfig, caches, hidden,
+                       cur_index, depths, active, *,
+                       window_seq_len: int = 0):
+    """Cloud half of a decode-serving step: resume from the shipped edge
+    carry ``hidden`` (B, 1, D) and run layers ``depths[b]+1 .. L-1`` for the
+    samples with ``active[b]`` set; everything else (inactive samples, and
+    layers the edge already advanced) passes through untouched — the
+    returned cache tree is bitwise the input tree at those coordinates, so
+    merging it back re-syncs the edge cache.
+
+    Returns (logits, new_caches).
+    """
+    x = hidden.astype(jnp.dtype(cfg.dtype))
+    window = cfg.effective_window(window_seq_len)
+
+    if cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        sp = params["shared_attn"]
+
+        def body(carry, inp):
+            xx, occ = carry
+            lp, st, i = inp
+            m = active & (i > depths)
+            xx2, new_st, _ = _layer_decode(cfg, params, lp, xx, st, cur_index,
+                                           window=window)
+
+            def with_attn(args):
+                xx2, occ = args
+                oi = (i + 1) // k - 1
+                sl = jax.tree.map(lambda a: a[oi], occ)
+                h, new_sl = attn.attn_decode(
+                    sp["attn"], apply_norm(xx2, sp["ln1"], cfg.norm), sl,
+                    cur_index, num_heads=cfg.num_heads,
+                    num_kv_heads=cfg.num_kv_heads,
+                    head_dim=cfg.resolved_head_dim, window=window,
+                    rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm)
+                xx2 = xx2 + h
+                xx2 = xx2 + ff.mlp_forward(
+                    sp["mlp"], apply_norm(xx2, sp["ln2"], cfg.norm),
+                    cfg.activation)
+                new_sl = _mask_rows(m, new_sl, sl)
+                occ = jax.tree.map(
+                    lambda buf, ns: jax.lax.dynamic_update_index_in_dim(
+                        buf, ns, oi, 0), occ, new_sl)
+                return xx2, occ
+
+            xx2, occ = jax.lax.cond(jnp.equal(jnp.mod(i + 1, k), 0),
+                                    with_attn, lambda a: a, (xx2, occ))
+            xx = jnp.where(m[:, None, None], xx2, xx)
+            new_st = _mask_rows(m, new_st, st)
+            return (xx, occ), new_st
+
+        idx = jnp.arange(cfg.num_layers)
+        (x, occ), new_ssm = jax.lax.scan(
+            body, (x, caches["attn"]), (params["layers"], caches["ssm"], idx),
+            unroll=_unroll())
+        new_caches = {"ssm": new_ssm, "attn": occ}
+    else:
+        cache_key = "ssm" if cfg.family == "ssm" else "attn"
+
+        def body(xx, inp):
+            lp, st, i = inp
+            m = active & (i > depths)
+            xx2, new_st, _ = _layer_decode(cfg, params, lp, xx, st, cur_index,
+                                           window=window)
+            xx = jnp.where(m[:, None, None], xx2, xx)
+            new_st = _mask_rows(m, new_st, st)
+            return xx, new_st
+
+        idx = jnp.arange(cfg.num_layers)
+        x, new_st = jax.lax.scan(
+            body, x, (params["layers"], caches[cache_key], idx),
+            unroll=_unroll())
+        new_caches = {cache_key: new_st}
+
+    ew = params["exit_w"] if "exit_w" in params \
+        else params["layers"]["exit_w"][-1]
+    xf = apply_norm(x, params["final_norm"], cfg.norm)
+    logits = constrain(xf[:, -1, :] @ ew, "batch", "model")
+    return logits, new_caches
+
+
 def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], *,
             backend: str = "ref", cache_seq_len: int = 0):
     """Process the prompt, build decode caches, return final logits.

@@ -50,19 +50,36 @@ from repro.serving.scheduler import (
     Request,
     RequestScheduler,
 )
+from repro.serving.kvcache import (
+    DecodeCacheManager,
+    offload_scale_vec,
+    step_slice_bytes,
+)
+from repro.serving.decode import (
+    DecodeRuntime,
+)
 from repro.serving.api import (
     Engine,
+    MultiTenantEngine,
     ServeReport,
     ServingConfig,
+    TenantSpec,
     serve,
 )
 
 __all__ = [
     # unified serving API (the supported surface)
     "Engine",
+    "MultiTenantEngine",
     "ServeReport",
     "ServingConfig",
+    "TenantSpec",
     "serve",
+    # autoregressive decode serving
+    "DecodeCacheManager",
+    "DecodeRuntime",
+    "offload_scale_vec",
+    "step_slice_bytes",
     # runtime building blocks
     "EdgeCloudRuntime",
     "EncodedRows",

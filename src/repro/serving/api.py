@@ -43,6 +43,8 @@ import numpy as np
 from repro.core.controller import CONTROLLER_MODES
 from repro.core.rewards import CostModel, CostTrace
 from repro.serving.batched import _BatchedSession, _serve_stream_batched
+from repro.serving.decode import (DecodeRuntime, _DecodeSession,
+                                  _serve_stream_decode)
 from repro.serving.distributed import _serve_stream_distributed
 from repro.serving.offload_codec import (QUANT_MODES, OffloadCodec,
                                          codec_from_fields)
@@ -52,7 +54,9 @@ from repro.serving.sharded import _ShardedSession, _serve_stream_sharded
 from repro.serving.simulator import EdgeCloudRuntime, _serve_stream_sequential
 
 PATHS = ("auto", "sequential", "batched", "sharded", "distributed")
-EDGE_MODES = ("bucketed", "scan")
+EDGE_MODES = ("bucketed", "scan", "auto")
+WORKLOADS = ("classify", "decode")
+SPLIT_POLICIES = ("bandit", "final")
 
 
 def _err(field: str, got, fix: str) -> str:
@@ -78,6 +82,11 @@ class ServingConfig:
 
     # ---- path selection ------------------------------------------------
     path: str = "auto"
+    # ---- workload ------------------------------------------------------
+    workload: str = "classify"        # "decode" = autoregressive generation
+    max_new_tokens: int = 0           # decode: tokens generated per sequence
+    split_policy: str = "bandit"      # decode: "final" forces full depth
+    tenant: Optional[str] = None      # label for MultiTenantEngine routing
     # ---- micro-batching / policy (all paths) ---------------------------
     batch_size: int = 1
     edge_mode: str = "bucketed"       # "scan" = one masked-scan program
@@ -104,6 +113,7 @@ class ServingConfig:
     # ---- quantized offload (all paths) ---------------------------------
     offload_quant: str = "none"       # | "int8" | "int4" per-channel affine
     offload_sparsity: float = 0.0     # fraction of entries dropped (top-|x|)
+    offload_error_feedback: bool = False  # decode: fold dropped mass forward
     # ---- non-stationary controller (all paths) -------------------------
     controller_mode: str = "stationary"  # | "sliding_window" | "discounted"
     window: int = 0                   # sliding-window size in batches; 0 = inf
@@ -204,18 +214,19 @@ class ServingConfig:
                 "edge_mode", self.edge_mode,
                 f"choose one of {EDGE_MODES} ('bucketed' = one pow2 "
                 f"launch per distinct split depth, 'scan' = one "
-                f"masked scan-over-layers program per batch shape)"))
-        if self.edge_mode == "scan" and self.path == "sequential":
+                f"masked scan-over-layers program per batch shape, "
+                f"'auto' = pick per batch from the observed depth mix)"))
+        if self.edge_mode in ("scan", "auto") and self.path == "sequential":
             raise ValueError(_err(
                 "edge_mode", self.edge_mode,
                 "the sequential path has no micro-batch edge phase to "
                 "swap; use path='batched' (or leave path='auto', which "
-                "resolves scan configs to the batched runtime)"))
-        if self.edge_mode == "scan" and self.distributed:
+                "resolves scan/auto configs to the batched runtime)"))
+        if self.edge_mode in ("scan", "auto") and self.distributed:
             raise ValueError(_err(
                 "edge_mode", self.edge_mode,
                 "the distributed runtime keeps the bucketed edge phase; "
-                "use the batched/sharded paths for scan mode"))
+                "use the batched/sharded paths for scan/auto mode"))
         if self.offload_quant not in QUANT_MODES:
             raise ValueError(_err(
                 "offload_quant", self.offload_quant,
@@ -297,6 +308,79 @@ class ServingConfig:
                 "batch_size", self.batch_size,
                 "the sequential path serves one sample per round; use "
                 "path='batched' (or path='auto')"))
+        if self.workload not in WORKLOADS:
+            raise ValueError(_err("workload", self.workload,
+                                  f"choose one of {WORKLOADS}"))
+        if self.split_policy not in SPLIT_POLICIES:
+            raise ValueError(_err(
+                "split_policy", self.split_policy,
+                f"choose one of {SPLIT_POLICIES} ('bandit' = SplitEE's "
+                f"UCB splitting layer, 'final' = full-depth decode, the "
+                f"final-layer-always baseline)"))
+        if self.max_new_tokens < 0:
+            raise ValueError(_err(
+                "max_new_tokens", self.max_new_tokens,
+                "the decode budget must be >= 1 (decode workloads) or 0 "
+                "(classify workloads)"))
+        if self.workload == "decode":
+            if self.max_new_tokens < 1:
+                raise ValueError(_err(
+                    "max_new_tokens", self.max_new_tokens,
+                    "decode workloads generate at least one token per "
+                    "sequence; set max_new_tokens >= 1"))
+            if self.path != "auto":
+                raise ValueError(_err(
+                    "path", self.path,
+                    "decode workloads run their own runtime "
+                    "(serving/decode.py), not the classifier path ladder; "
+                    "leave path='auto'"))
+            for field, why in (
+                    ("distributed", "multi-process serving"),
+                    ("fault_tolerant", "fault tolerance"),
+                    ("mesh", "the sharded mesh runtime"),
+                    ("side_info", "SplitEE-S side information"),
+                    ("record_trace", "the per-sample confidence trace"),
+                    ("record_states", "per-batch controller snapshots")):
+                if getattr(self, field):
+                    raise ValueError(_err(
+                        field, True,
+                        f"{why} is a classifier-path feature; the decode "
+                        f"runtime does not support it yet"))
+            if self.replicas > 1:
+                raise ValueError(_err(
+                    "replicas", self.replicas,
+                    "the decode runtime is single-replica; data "
+                    "parallelism for decode is future work"))
+            if self.edge_mode != "bucketed":
+                raise ValueError(_err(
+                    "edge_mode", self.edge_mode,
+                    "the decode runtime always runs one masked program "
+                    "per step (its own edge phase); leave the default "
+                    "edge_mode='bucketed'"))
+        else:
+            if self.max_new_tokens:
+                raise ValueError(_err(
+                    "max_new_tokens", self.max_new_tokens,
+                    "token budgets apply to decode workloads; set "
+                    "workload='decode'"))
+            if self.split_policy != "bandit":
+                raise ValueError(_err(
+                    "split_policy", self.split_policy,
+                    "the forced-final baseline exists for decode "
+                    "workloads; set workload='decode'"))
+            if self.offload_error_feedback:
+                raise ValueError(_err(
+                    "offload_error_feedback", True,
+                    "error feedback accumulates residuals across one "
+                    "sequence's successive offloads — a decode-workload "
+                    "notion; set workload='decode'"))
+        if self.offload_error_feedback and self.offload_quant == "none" \
+                and self.offload_sparsity == 0.0:
+            raise ValueError(_err(
+                "offload_error_feedback", True,
+                "the identity codec drops nothing, so there is no "
+                "residual to feed back; set offload_quant and/or "
+                "offload_sparsity"))
 
     def resolved_path(self) -> str:
         """The concrete runtime this config selects.
@@ -309,6 +393,8 @@ class ServingConfig:
         distributed@H=1) means this selection never changes the policy —
         only how much machinery runs.
         """
+        if self.workload == "decode":
+            return "decode"
         if self.path != "auto":
             return self.path
         if self.distributed or self.fault_tolerant:
@@ -316,7 +402,7 @@ class ServingConfig:
         if self.replicas > 1 or self.mesh:
             return "sharded"
         if (self.batch_size > 1 or self.record_trace
-                or self.edge_mode == "scan"):
+                or self.edge_mode in ("scan", "auto")):
             return "batched"
         return "sequential"
 
@@ -372,6 +458,8 @@ class ServeReport:
     distributed: Optional[Dict[str, Any]] = None   # cluster section
     states: Optional[List[Dict[str, Any]]] = None  # per-batch snapshots
     scheduler: Optional[Dict[str, Any]] = None     # request-scheduler stats
+    decode: Optional[Dict[str, Any]] = None        # decode-workload section
+    tenant: Optional[str] = None                   # MultiTenantEngine label
 
     @classmethod
     def from_raw(cls, raw: Dict[str, Any], *, path: str, num_layers: int,
@@ -410,6 +498,8 @@ class ServeReport:
             distributed=raw.get("distributed"),
             states=raw.get("states"),
             scheduler=raw.get("scheduler"),
+            decode=raw.get("decode"),
+            tenant=raw.get("tenant"),
         )
 
     def to_dict(self) -> Dict[str, Any]:
@@ -456,7 +546,8 @@ def _codec_from_config(config: ServingConfig) -> Optional[OffloadCodec]:
     """The offload codec a config implies, or None for the identity
     config (quant='none', sparsity=0.0) — so codec-free runs keep
     today's exact byte-for-byte path."""
-    return codec_from_fields(config.offload_quant, config.offload_sparsity)
+    return codec_from_fields(config.offload_quant, config.offload_sparsity,
+                             config.offload_error_feedback)
 
 
 def _controller_kwargs(config: ServingConfig) -> Optional[Dict[str, Any]]:
@@ -505,6 +596,11 @@ def serve(runtime: EdgeCloudRuntime, params, stream, cost: CostModel,
     if overrides:
         config = dataclasses.replace(config, **overrides)
     path = config.resolved_path()
+    if isinstance(runtime, DecodeRuntime) and path != "decode":
+        raise ValueError(
+            f"runtime is a DecodeRuntime but the config resolves to "
+            f"path={path!r}; set ServingConfig(workload='decode', "
+            f"max_new_tokens=...)")
     if mesh is not None and path not in ("sharded", "distributed"):
         raise ValueError(
             f"an explicit mesh applies to the sharded/distributed paths; "
@@ -526,6 +622,19 @@ def serve(runtime: EdgeCloudRuntime, params, stream, cost: CostModel,
                                        config.max_samples or None):
             eng.submit(sample)
         return eng.close()
+    if path == "decode":
+        t0 = time.perf_counter()
+        raw = _serve_stream_decode(
+            runtime, params, stream, cost,
+            batch_size=config.batch_size,
+            max_new_tokens=config.max_new_tokens,
+            split_policy=config.split_policy, beta=config.beta,
+            max_samples=config.max_samples,
+            controller_kwargs=_controller_kwargs(config),
+            codec=_codec_from_config(config))
+        return ServeReport.from_raw(
+            raw, path=path, num_layers=cost.num_layers,
+            wall_s=time.perf_counter() - t0)
     common = dict(side_info=config.side_info, beta=config.beta,
                   max_samples=config.max_samples,
                   labels_for_accounting=config.labels_for_accounting,
@@ -567,6 +676,58 @@ def serve(runtime: EdgeCloudRuntime, params, stream, cost: CostModel,
 
 
 # ----------------------------------------------------------------- engine
+
+def _build_session(runtime, params, cost: CostModel, config: ServingConfig,
+                   *, mesh=None):
+    """Construct the push-session a config selects (shared by `Engine`
+    and `MultiTenantEngine`). Returns (session, path_label)."""
+    c = config
+    path = c.resolved_path()
+    if path == "distributed":
+        raise ValueError(
+            "Engine does not drive the distributed runtime: every "
+            "host must consume the same logical stream, which a "
+            "single-process push-session cannot guarantee; call "
+            "serve() with the distributed ServingConfig on each host")
+    ctl_kw = _controller_kwargs(c)
+    codec = _codec_from_config(c)
+    if path == "decode":
+        if mesh is not None:
+            raise ValueError(
+                "an explicit mesh applies to the sharded path; this "
+                "config resolves to 'decode'")
+        sess = _DecodeSession(
+            runtime, params, cost, batch_size=c.batch_size,
+            max_new_tokens=c.max_new_tokens, split_policy=c.split_policy,
+            beta=c.beta, controller_kwargs=ctl_kw, codec=codec)
+    elif path == "sharded":
+        sess = _ShardedSession(
+            runtime, params, cost, batch_size=c.batch_size,
+            replicas=c.replicas, mesh=mesh, overlap=c.overlap,
+            overlap_depth=c.overlap_depth, side_info=c.side_info,
+            beta=c.beta, labels_for_accounting=c.labels_for_accounting,
+            record_trace=c.record_trace, edge_mode=c.edge_mode,
+            controller_kwargs=ctl_kw, codec=codec)
+    else:
+        if mesh is not None:
+            raise ValueError(
+                f"an explicit mesh applies to the sharded path; this "
+                f"config resolves to {path!r}")
+        if isinstance(runtime, DecodeRuntime):
+            raise ValueError(
+                f"runtime is a DecodeRuntime but the config resolves to "
+                f"path={path!r}; set ServingConfig(workload='decode', "
+                f"max_new_tokens=...)")
+        # sequential configs ride the batched machinery at B=1 —
+        # bit-identical by the ladder, so the label stays honest
+        sess = _BatchedSession(
+            runtime, params, cost, batch_size=c.batch_size,
+            side_info=c.side_info, beta=c.beta,
+            labels_for_accounting=c.labels_for_accounting,
+            record_trace=c.record_trace, edge_mode=c.edge_mode,
+            controller_kwargs=ctl_kw, codec=codec)
+    return sess, path
+
 
 class Engine:
     """Push-session serving: request-level traffic over the same
@@ -614,38 +775,9 @@ class Engine:
                  clock: Optional[Callable[[], float]] = None):
         self.config = config if config is not None else ServingConfig()
         self.cost = cost
-        path = self.config.resolved_path()
-        if path == "distributed":
-            raise ValueError(
-                "Engine does not drive the distributed runtime: every "
-                "host must consume the same logical stream, which a "
-                "single-process push-session cannot guarantee; call "
-                "serve() with the distributed ServingConfig on each host")
         c = self.config
-        self._path = path             # what serve() would report
-        ctl_kw = _controller_kwargs(c)
-        codec = _codec_from_config(c)
-        if path == "sharded":
-            self._sess = _ShardedSession(
-                runtime, params, cost, batch_size=c.batch_size,
-                replicas=c.replicas, mesh=mesh, overlap=c.overlap,
-                overlap_depth=c.overlap_depth, side_info=c.side_info,
-                beta=c.beta, labels_for_accounting=c.labels_for_accounting,
-                record_trace=c.record_trace, edge_mode=c.edge_mode,
-                controller_kwargs=ctl_kw, codec=codec)
-        else:
-            if mesh is not None:
-                raise ValueError(
-                    f"an explicit mesh applies to the sharded path; this "
-                    f"config resolves to {path!r}")
-            # sequential configs ride the batched machinery at B=1 —
-            # bit-identical by the ladder, so the label stays honest
-            self._sess = _BatchedSession(
-                runtime, params, cost, batch_size=c.batch_size,
-                side_info=c.side_info, beta=c.beta,
-                labels_for_accounting=c.labels_for_accounting,
-                record_trace=c.record_trace, edge_mode=c.edge_mode,
-                controller_kwargs=ctl_kw, codec=codec)
+        self._sess, self._path = _build_session(runtime, params, cost, c,
+                                                mesh=mesh)
         self._clock = clock if clock is not None else time.monotonic
         self._sched: Optional[RequestScheduler] = None
         if c.scheduler != "none":
@@ -822,6 +954,171 @@ class Engine:
             wall_s=time.perf_counter() - self._t0)
 
 
+# ------------------------------------------------------- multi-tenant
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """Everything one tenant brings to a shared engine: its model runtime
+    (classifier `EdgeCloudRuntime` or `DecodeRuntime` — families can be
+    mixed freely across tenants), parameters, cost model, and the
+    per-tenant `ServingConfig` describing its session (batch size, policy
+    knobs, workload). Scheduler fields stay on the shared engine — a
+    tenant config asking for its own scheduler is rejected."""
+    runtime: Any
+    params: Any
+    cost: CostModel
+    config: ServingConfig
+
+
+class MultiTenantEngine:
+    """One engine, many tenants: mixed model families behind a single
+    shared `RequestScheduler` with per-tenant fairness and quotas.
+
+    Each tenant gets its own session (its own controller, queue, caches —
+    different tenants usually run different models, so batches NEVER mix
+    tenants); the shared scheduler owns admission and batch formation:
+    per-tenant batch sizes (each tenant's ``config.batch_size``),
+    round-robin fairness across tenants with ready batches
+    (least-recently-served first), per-tenant queue quotas
+    (``tenant_quota`` — admission sheds with reason "tenant_quota" beyond
+    a tenant's cap, so one tenant's burst cannot crowd out the rest), and
+    a shared ``batch_deadline_ms`` for partial-batch closing.
+
+    Because the scheduler only *orders* whole per-tenant batches and each
+    session is private, a tenant's report is identical to the same stream
+    served alone through its own `Engine` — the multi-tenant pin in
+    tests/test_decode_serving.py. `close()` returns ``{tenant:
+    ServeReport}``, each stamped with the tenant label and the scheduler's
+    per-tenant conservation ledger (submitted == served + shed + pending).
+    """
+
+    def __init__(self, tenants: Dict[str, TenantSpec], *,
+                 max_queue: int = 0, batch_deadline_ms: float = 0.0,
+                 shed_policy: str = "reject",
+                 tenant_quota: Optional[Dict[str, int]] = None,
+                 clock: Optional[Callable[[], float]] = None):
+        if not tenants:
+            raise ValueError("MultiTenantEngine needs at least one tenant")
+        for name, spec in tenants.items():
+            c = spec.config
+            if c.scheduler != "none" or c.max_queue or c.batch_deadline_ms:
+                raise ValueError(
+                    f"tenant {name!r}: scheduler fields belong to the "
+                    f"shared MultiTenantEngine (max_queue / "
+                    f"batch_deadline_ms / tenant_quota constructor args); "
+                    f"set scheduler='none' on the tenant config")
+            if c.tenant is not None and c.tenant != name:
+                raise ValueError(
+                    f"tenant {name!r}: config.tenant={c.tenant!r} "
+                    f"disagrees with its key in the tenants dict")
+        unknown = sorted(set(tenant_quota or {}) - set(tenants))
+        if unknown:
+            raise ValueError(
+                f"tenant_quota names unknown tenant(s) {unknown}; known "
+                f"tenants are {sorted(tenants)}")
+        self._specs = dict(tenants)
+        self._sessions: Dict[str, Any] = {}
+        self._paths: Dict[str, str] = {}
+        for name, spec in tenants.items():
+            sess, path = _build_session(spec.runtime, spec.params,
+                                        spec.cost, spec.config)
+            self._sessions[name] = sess
+            self._paths[name] = path
+        self._clock = clock if clock is not None else time.monotonic
+        self._sched = RequestScheduler(
+            batch_size=1, max_queue=max_queue,
+            batch_deadline_ms=batch_deadline_ms, shed_policy=shed_policy,
+            clock=self._clock,
+            tenant_batch_size={n: s.config.batch_size
+                               for n, s in tenants.items()},
+            tenant_quota=dict(tenant_quota or {}))
+        self._closed = False
+        self._t0 = time.perf_counter()
+        self._final: Optional[Dict[str, ServeReport]] = None
+
+    @property
+    def tenants(self):
+        return sorted(self._specs)
+
+    @property
+    def scheduler(self) -> RequestScheduler:
+        return self._sched
+
+    @property
+    def pending(self) -> int:
+        return self._sched.pending
+
+    def submit(self, tenant: str, samples, *, priority: int = 0,
+               deadline_ms: Optional[float] = None) -> int:
+        """Offer samples on behalf of ``tenant``; returns how many were
+        admitted (quota/queue shedding may refuse some)."""
+        if self._closed:
+            raise RuntimeError(
+                "MultiTenantEngine is closed; create a new one")
+        if tenant not in self._specs:
+            raise KeyError(
+                f"unknown tenant {tenant!r}; known tenants are "
+                f"{sorted(self._specs)}")
+        if isinstance(samples, dict):
+            samples = [samples]
+        accepted = 0
+        for s in samples:
+            if self._sched.offer(s, priority=priority,
+                                 deadline_ms=deadline_ms, tenant=tenant):
+                accepted += 1
+        self._pump()
+        return accepted
+
+    def tick(self) -> int:
+        """Shed expired requests and close deadline-due partial batches;
+        returns samples served by this tick."""
+        if self._closed:
+            raise RuntimeError(
+                "MultiTenantEngine is closed; create a new one")
+        return self._pump()
+
+    def _pump(self) -> int:
+        served = 0
+        for reqs in self._sched.poll():
+            self._sessions[reqs[0].tenant].push([r.sample for r in reqs])
+            self._sched.complete(reqs)
+            served += len(reqs)
+        return served
+
+    def close(self) -> Dict[str, ServeReport]:
+        """Flush the shared queue (batches stay tenant-pure), drain every
+        session, and return per-tenant reports. Idempotent."""
+        if self._closed:
+            return self._final
+        for reqs in self._sched.flush():
+            self._sessions[reqs[0].tenant].push([r.sample for r in reqs])
+            self._sched.complete(reqs)
+        wall = time.perf_counter() - self._t0
+        snap = self._sched.snapshot()
+        per_tenant = snap.get("tenants", {})
+        out = {}
+        for name, sess in self._sessions.items():
+            sess.drain()
+            raw = sess.result()
+            raw["tenant"] = name
+            raw["scheduler"] = {**snap,
+                                "tenant": per_tenant.get(name)}
+            out[name] = ServeReport.from_raw(
+                raw, path=self._paths[name],
+                num_layers=self._specs[name].cost.num_layers, wall_s=wall)
+        self._final = out
+        self._closed = True
+        return out
+
+    def __enter__(self) -> "MultiTenantEngine":
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is None:
+            self.close()
+        return False
+
+
 # ------------------------------------------------------------ deprecation
 
 def _warn_legacy(name: str):
@@ -840,7 +1137,9 @@ def _warn_legacy(name: str):
 
 __all__ = [
     "Engine",
+    "MultiTenantEngine",
     "ServeReport",
     "ServingConfig",
+    "TenantSpec",
     "serve",
 ]

@@ -94,9 +94,17 @@ class EncodedRows:
 
 @dataclasses.dataclass(frozen=True)
 class OffloadCodec:
-    """quant in {"none", "int8", "int4"}; sparsity = fraction dropped."""
+    """quant in {"none", "int8", "int4"}; sparsity = fraction dropped.
+
+    ``error_feedback`` opts into the EF-SGD-style compensation loop for
+    *sequences* that offload repeatedly (decode serving): the caller keeps a
+    per-sequence residual and calls :meth:`encode_with_feedback`, which
+    folds the mass the previous encode dropped into the next one. The codec
+    itself stays frozen/stateless — the residual lives with the caller.
+    """
     quant: str = "none"
     sparsity: float = 0.0
+    error_feedback: bool = False
 
     def __post_init__(self):
         if self.quant not in QUANT_MODES:
@@ -179,6 +187,23 @@ class OffloadCodec:
         return EncodedRows(self, (k, s, d), dtype, data,
                            scale=scale, zero=zero, index=index)
 
+    def encode_with_feedback(self, rows: np.ndarray, residual: np.ndarray):
+        """Error-feedback encode: fold the residual the previous round
+        dropped into this round's input, encode, and return the new
+        residual.
+
+        rows, residual: (k, S, D). Returns ``(enc, decoded, new_residual)``
+        where ``decoded`` is the cloud-side reconstruction of this round's
+        payload and ``new_residual = (rows + residual) - decoded`` — the
+        mass still owed to the stream. With ``quant="none"``/``sparsity=0``
+        the codec is lossless so the residual stays exactly zero.
+        """
+        x = np.asarray(rows, np.float32) + np.asarray(residual, np.float32)
+        enc = self.encode(x.astype(rows.dtype))
+        decoded = self.decode(enc)
+        new_residual = x - decoded.astype(np.float32)
+        return enc, decoded, new_residual
+
     # ------------------------------------------------------------- decode
 
     def decode(self, enc: EncodedRows) -> np.ndarray:
@@ -212,9 +237,13 @@ class OffloadCodec:
         return x.astype(enc.dtype)
 
 
-def codec_from_fields(quant: str, sparsity: float) -> Optional[OffloadCodec]:
+def codec_from_fields(quant: str, sparsity: float,
+                      error_feedback: bool = False
+                      ) -> Optional[OffloadCodec]:
     """None for the identity config, so callers keep today's exact
-    (codec-free) path — mirrors `_controller_kwargs` in serving/api.py."""
+    (codec-free) path — mirrors `_controller_kwargs` in serving/api.py.
+    (An identity codec drops nothing, so error_feedback is moot there.)"""
     if quant == "none" and sparsity == 0.0:
         return None
-    return OffloadCodec(quant=quant, sparsity=sparsity)
+    return OffloadCodec(quant=quant, sparsity=sparsity,
+                        error_feedback=error_feedback)

@@ -39,7 +39,7 @@ from repro.core.rewards import CostModel
 from repro.serving.batched import OffloadQueue, _pad_rows
 from repro.serving.simulator import EdgeCloudRuntime
 
-EDGE_MODES = ("bucketed", "scan")
+EDGE_MODES = ("bucketed", "scan", "auto")
 
 
 def _edge_phase_scan(runtime: EdgeCloudRuntime, params, tokens: np.ndarray,
@@ -84,10 +84,29 @@ def _edge_phase_scan(runtime: EdgeCloudRuntime, params, tokens: np.ndarray,
     return conf_paths, batch_preds
 
 
+def _edge_phase_auto(runtime: EdgeCloudRuntime, params, tokens: np.ndarray,
+                     arms: np.ndarray, cost: CostModel, queue: OffloadQueue,
+                     *, side_info: bool, put=jnp.asarray, replicas: int = 1):
+    """Per-micro-batch mode pick: a batch mixing >= 2 distinct depths goes
+    through the single scan launch; a uniform-depth batch takes the
+    bucketed path (one launch there too, without scan's all-L FLOPs).
+    Both phases produce bitwise-identical observables and queue order, so
+    the pick changes launch shape only — never results (pinned by the
+    auto differential test)."""
+    if len(np.unique(np.asarray(arms))) >= 2:
+        phase = _edge_phase_scan
+    else:
+        from repro.serving.batched import _edge_phase as phase
+    return phase(runtime, params, tokens, arms, cost, queue,
+                 side_info=side_info, put=put, replicas=replicas)
+
+
 def select_edge_phase(edge_mode: str):
     """Resolve an ``edge_mode`` string to its phase function."""
     if edge_mode == "scan":
         return _edge_phase_scan
+    if edge_mode == "auto":
+        return _edge_phase_auto
     if edge_mode == "bucketed":
         from repro.serving.batched import _edge_phase
         return _edge_phase

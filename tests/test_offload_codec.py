@@ -186,3 +186,63 @@ def test_encode_deterministic_including_ties():
     np.testing.assert_array_equal(a.index, b.index)
     kept = codec.kept(4, 8)
     np.testing.assert_array_equal(a.index[0], np.arange(kept))
+
+
+# ------------------------------------------------------- error feedback
+
+def test_error_feedback_reduces_accumulated_error():
+    """EF-SGD-style compensation: re-shipping a slowly varying hidden
+    through a lossy codec with the quantization residual folded into the
+    next payload must shrink the *accumulated* reconstruction error —
+    the per-step bias stops compounding. Pinned for both lossy quants
+    and for sparsification, the three loss sources the codec has."""
+    T = 48
+    # S > 1 so per-channel min < max: an S=1 payload quantizes exactly
+    # under the zero-range guard and has nothing to compensate
+    x = _rows((4, 8, 32), seed=7)
+    for codec in (OffloadCodec(quant="int8"),
+                  OffloadCodec(quant="int4"),
+                  OffloadCodec(sparsity=0.5)):
+        plain_sum = np.zeros_like(x)
+        ef_sum = np.zeros_like(x)
+        residual = np.zeros(x.shape, np.float32)
+        for _ in range(T):
+            plain_sum += codec.decode(codec.encode(x))
+            _, decoded, residual = codec.encode_with_feedback(x, residual)
+            ef_sum += decoded
+        err_plain = np.abs(plain_sum - T * x).max()
+        err_ef = np.abs(ef_sum - T * x).max()
+        # plain loss compounds linearly in T; EF keeps it one-step sized
+        assert err_ef < err_plain / 4, (codec, err_ef, err_plain)
+
+
+def test_error_feedback_residual_stays_bounded():
+    """The carried residual must not grow with the stream length: it is
+    always the error of ONE compensated encode."""
+    x = _rows((2, 8, 16), seed=8)
+    codec = OffloadCodec(quant="int8")
+    residual = np.zeros(x.shape, np.float32)
+    norms = []
+    for _ in range(64):
+        _, _, residual = codec.encode_with_feedback(x, residual)
+        norms.append(np.abs(residual).max())
+    one_step = np.abs(codec.decode(codec.encode(x)) - x).max()
+    assert max(norms) <= 4 * one_step + 1e-6
+
+
+def test_error_feedback_lossless_codec_is_noop():
+    """quant='none', sparsity=0 round-trips bitwise, so the residual is
+    identically zero and EF changes nothing."""
+    x = _rows((2, 8, 16), seed=9)
+    codec = OffloadCodec(error_feedback=True)
+    residual = np.zeros(x.shape, np.float32)
+    _, decoded, residual = codec.encode_with_feedback(x, residual)
+    np.testing.assert_array_equal(decoded, x)
+    np.testing.assert_array_equal(residual, 0.0)
+
+
+def test_codec_from_fields_error_feedback():
+    assert codec_from_fields("none", 0.0, error_feedback=True) is None
+    codec = codec_from_fields("int8", 0.0, error_feedback=True)
+    assert codec is not None and codec.error_feedback
+    assert not codec_from_fields("int8", 0.0).error_feedback

@@ -35,7 +35,7 @@ from repro.data.synthetic import VOCAB
 from repro.serving import (EdgeCloudRuntime, Engine, RequestScheduler,
                            ServingConfig, serve)
 from repro.serving.scheduler import (SHED_DEADLINE, SHED_EVICTED,
-                                     SHED_QUEUE_FULL)
+                                     SHED_QUEUE_FULL, SHED_TENANT_QUOTA)
 
 
 class FakeClock:
@@ -367,7 +367,7 @@ def test_engine_sheds_expired_and_overflow(served):
     assert rep.n == 0
     assert eng.shed == 4
     assert rep.scheduler["shed_reasons"] == {
-        "queue_full": 1, "evicted": 0, "deadline": 3}
+        "queue_full": 1, "evicted": 0, "deadline": 3, "tenant_quota": 0}
     assert eng.submitted == rep.n + eng.shed + eng.dropped == 4
 
 
@@ -459,3 +459,117 @@ def test_fuzz_mid_drains_conserve_and_grow(served, seed):
     rep = eng.close()
     assert rep.n >= last_n
     assert eng.submitted == rep.n + eng.shed + eng.dropped == len(samples)
+
+
+# ------------------------------------------------------- tenant support
+
+def test_tenantless_snapshot_has_no_tenant_section():
+    s, _ = _sched(batch_size=2)
+    s.offer(_sample(0))
+    s.complete(s.flush()[0])
+    assert "tenants" not in s.snapshot()
+
+
+def test_tenant_batches_are_pure_and_capped():
+    s, _ = _sched(batch_size=1, tenant_batch_size={"a": 3, "b": 2})
+    for i in range(7):
+        s.offer(_sample(i), tenant="a" if i % 2 == 0 else "b")
+    batches = s.poll()
+    # a has 4 queued (cap 3 -> one full batch), b has 3 (cap 2 -> one)
+    assert [len(b) for b in batches] == [3, 2]
+    for b in batches:
+        assert len({r.tenant for r in b}) == 1
+    tail = s.flush()
+    assert sorted(len(b) for b in tail) == [1, 1]
+    for b in batches + tail:
+        s.complete(b)
+    snap = s.snapshot()
+    assert snap["tenants"]["a"] == {
+        "submitted": 4, "served": 4, "shed": 0, "batches": 2, "pending": 0}
+    assert snap["tenants"]["b"] == {
+        "submitted": 3, "served": 3, "shed": 0, "batches": 2, "pending": 0}
+    # conservation holds globally AND per tenant
+    assert snap["submitted"] == snap["served"] + snap["shed"] \
+        + snap["pending"] == 7
+
+
+def test_tenant_quota_reject_sheds_newcomer():
+    s, _ = _sched(batch_size=4, tenant_quota={"a": 2})
+    assert s.offer(_sample(0), tenant="a")
+    assert s.offer(_sample(1), tenant="a")
+    assert not s.offer(_sample(2), tenant="a")       # over quota
+    assert s.offer(_sample(3), tenant="b")           # b unaffected
+    assert s.shed_reasons[SHED_TENANT_QUOTA] == 1
+    snap = s.snapshot()
+    assert snap["tenants"]["a"]["shed"] == 1
+    assert snap["tenants"]["b"]["shed"] == 0
+
+
+def test_tenant_quota_drop_oldest_evicts_within_tenant():
+    s, _ = _sched(batch_size=4, shed_policy="drop_oldest",
+                  tenant_quota={"a": 2})
+    s.offer(_sample(0), tenant="a", priority=0)
+    s.offer(_sample(1), tenant="a", priority=1)
+    s.offer(_sample(9), tenant="b", priority=0)      # lower than newcomer
+    # high-priority newcomer evicts a's own oldest low-priority request,
+    # never touching b's queue
+    assert s.offer(_sample(2), tenant="a", priority=2)
+    ids = {r.sample["id"] for r in s._queue}
+    assert ids == {1, 9, 2}
+    assert s.shed_reasons[SHED_EVICTED] == 1
+    # a low-priority newcomer at quota is itself shed
+    assert not s.offer(_sample(3), tenant="a", priority=0)
+    assert s.shed_reasons[SHED_TENANT_QUOTA] == 1
+
+
+def test_tenant_fairness_least_recently_served():
+    s, _ = _sched(batch_size=2)
+    for i in range(4):
+        s.offer(_sample(i), tenant="a")
+        s.offer(_sample(10 + i), tenant="b")
+    order = [b[0].tenant for b in s.poll()]
+    # both fill twice; service alternates instead of draining one tenant
+    assert order == ["a", "b", "a", "b"]
+
+
+def test_tenant_deadline_closes_partial_tenant_batch():
+    s, clk = _sched(batch_size=8, batch_deadline_ms=50.0)
+    s.offer(_sample(0), tenant="a")
+    clk.advance(0.030)
+    s.offer(_sample(1), tenant="b")
+    clk.advance(0.025)                 # a is 55ms old, b only 25ms
+    batches = s.poll()
+    assert len(batches) == 1 and batches[0][0].tenant == "a"
+    assert s.pending == 1
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=20, deadline=None)
+def test_tenant_conservation_property(seed):
+    """Random interleavings of tenant-labeled offers, polls, and flushes:
+    conservation holds per tenant, every formed batch is tenant-pure and
+    within its tenant's cap."""
+    rng = np.random.default_rng(seed)
+    caps = {"a": int(rng.integers(1, 4)), "b": int(rng.integers(1, 4))}
+    quota = {"a": int(rng.integers(1, 5))}
+    s, _ = _sched(batch_size=int(rng.integers(1, 4)),
+                  tenant_batch_size=caps, tenant_quota=quota)
+    tenants = ["a", "b", None]
+    for i in range(int(rng.integers(5, 40))):
+        t = tenants[int(rng.integers(0, 3))]
+        s.offer(_sample(i), tenant=t,
+                priority=int(rng.integers(0, 3)))
+        if rng.integers(0, 3) == 0:
+            for b in s.poll():
+                assert len({r.tenant for r in b}) == 1
+                cap = caps.get(b[0].tenant, s.batch_size)
+                assert len(b) <= cap
+                s.complete(b)
+    for b in s.flush():
+        assert len({r.tenant for r in b}) == 1
+        s.complete(b)
+    snap = s.snapshot()
+    assert snap["submitted"] == snap["served"] + snap["shed"]
+    assert snap["pending"] == 0
+    for led in snap.get("tenants", {}).values():
+        assert led["submitted"] == led["served"] + led["shed"]

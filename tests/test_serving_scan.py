@@ -67,7 +67,8 @@ from repro.models.api import build_model
 from repro.serving import Engine, EdgeCloudRuntime, ServingConfig, serve
 from repro.serving.api import EDGE_MODES
 from repro.serving.batched import OffloadQueue, _edge_phase
-from repro.serving.scan_edge import _edge_phase_scan, select_edge_phase
+from repro.serving.scan_edge import (_edge_phase_auto, _edge_phase_scan,
+                                     select_edge_phase)
 
 ALPHA = 0.6      # mixed stream on the untrained testbed (see docstring)
 
@@ -135,6 +136,7 @@ def test_scan_matches_bucketed_serve(testbed, side_info, batch_size):
     assert 0.0 < exited.mean() < 1.0
     assert len(set(np.asarray(outs["bucketed"]["arms"]).tolist())) >= 3
     _assert_reports_identical(outs["bucketed"], outs["scan"])
+    _assert_reports_identical(outs["scan"], outs["auto"])
 
 
 def test_scan_matches_bucketed_ragged_tail(testbed):
@@ -151,6 +153,7 @@ def test_scan_matches_bucketed_ragged_tail(testbed):
                                                max_samples=140))
     assert outs["scan"]["n"] == 140
     _assert_reports_identical(outs["bucketed"], outs["scan"])
+    _assert_reports_identical(outs["scan"], outs["auto"])
 
 
 # --------------------------------------- forced mixed-depth phase parity
@@ -202,8 +205,55 @@ def test_phase_parity_mixed_depths(testbed, side_info):
 def test_select_edge_phase_resolution():
     assert select_edge_phase("bucketed") is _edge_phase
     assert select_edge_phase("scan") is _edge_phase_scan
+    assert select_edge_phase("auto") is _edge_phase_auto
     with pytest.raises(ValueError, match="unknown edge_mode 'turbo'"):
         select_edge_phase("turbo")
+
+
+def test_auto_dispatch_matches_selected_mode(testbed):
+    """`auto` picks per micro-batch and must match whichever phase it
+    selected BITWISE. Dispatch itself is pinned via the jit caches on a
+    fresh runtime: a uniform-depth batch must leave the scan program
+    uncompiled (bucketed branch), a mixed-depth batch must leave the
+    bucketed `edge_fn` uncompiled (scan branch)."""
+    cfg, params, eval_data, cost = testbed
+    B = 8
+    tokens = np.asarray(eval_data["tokens"][:B])
+
+    # uniform depths -> bucketed branch
+    uni = np.full(B, 1, dtype=np.int64)
+    rt = EdgeCloudRuntime(cfg)
+    q_a = OffloadQueue(rt, params)
+    paths_a, preds_a = _edge_phase_auto(rt, params, tokens, uni, cost, q_a,
+                                        side_info=False)
+    if hasattr(rt.edge_scan_fn, "_cache_size"):
+        assert rt.edge_scan_fn._cache_size() == 0
+    q_b = OffloadQueue(rt, params)
+    paths_b, preds_b = _edge_phase(rt, params, tokens, uni, cost, q_b,
+                                   side_info=False)
+    assert preds_a == preds_b
+    for s in range(B):
+        np.testing.assert_array_equal(paths_a[s], paths_b[s])
+    assert q_a.slots == q_b.slots
+
+    # mixed depths -> scan branch
+    mixed = _forced_arms(B, cfg.num_layers)
+    rt = EdgeCloudRuntime(cfg)
+    q_a = OffloadQueue(rt, params)
+    paths_a, preds_a = _edge_phase_auto(rt, params, tokens, mixed, cost,
+                                        q_a, side_info=False)
+    if hasattr(rt.edge_fn, "_cache_size"):
+        assert rt.edge_fn._cache_size() == 0
+    q_s = OffloadQueue(rt, params)
+    paths_s, preds_s = _edge_phase_scan(rt, params, tokens, mixed, cost,
+                                        q_s, side_info=False)
+    assert preds_a == preds_s
+    for s in range(B):
+        np.testing.assert_array_equal(paths_a[s], paths_s[s])
+    assert q_a.slots == q_s.slots
+    for d in q_a.rows:
+        np.testing.assert_array_equal(np.stack(q_a.rows[d]),
+                                      np.stack(q_s.rows[d]))
 
 
 # ------------------------------------------------------- sharded parity
